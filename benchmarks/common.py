@@ -1,0 +1,64 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FederatedTrainer, ModelBundle, make_bfln
+from repro.core.baselines import STRATEGY_FACTORIES
+from repro.data import dirichlet_partition, make_classification_dataset, pack_clients
+from repro.data.partition import sample_probe_batch
+from repro.models import classifier as clf
+from repro.optim import adam
+
+
+def time_us(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_fl(dataset: str, bias: float, strategy: str, *, n_clients: int = 20,
+           rounds: int = 12, local_epochs: int = 2, n_batches: int = 4,
+           batch_size: int = 64, n_clusters: int = 5, seed: int = 0,
+           psi: int = 32):
+    """One federated training run; returns (trainer, personalized_acc)."""
+    (xt, yt), (xe, ye) = make_classification_dataset(dataset, seed=seed)
+    parts = dirichlet_partition(yt, n_clients, bias, seed=seed)
+    cx, cy, tx, ty = pack_clients(xt, yt, parts, n_batches=n_batches,
+                                  batch_size=batch_size, seed=seed)
+    num_classes = int(yt.max()) + 1
+    cfg = clf.MLPConfig(in_dim=xt.shape[1], hidden=(128,), rep_dim=64,
+                        num_classes=num_classes)
+    bundle = ModelBundle(functools.partial(clf.apply, cfg),
+                         functools.partial(clf.embed, cfg), num_classes)
+    sp = clf.init_stacked(cfg, jax.random.PRNGKey(seed), n_clients)
+
+    if strategy == "bfln":
+        probe = jnp.asarray(sample_probe_batch(xt, yt, category=0, psi=psi,
+                                               seed=seed))
+        strat = make_bfln(bundle, probe, n_clusters)
+        tr = FederatedTrainer(bundle, strat, adam(1e-3),
+                              local_epochs=local_epochs, n_clusters=n_clusters)
+    else:
+        strat = STRATEGY_FACTORIES[strategy](bundle)
+        tr = FederatedTrainer(bundle, strat, adam(1e-3),
+                              local_epochs=local_epochs, use_chain=False)
+
+    p, o = tr.init(sp)
+    cx, cy = jnp.asarray(cx), jnp.asarray(cy)
+    xe, ye = jnp.asarray(xe), jnp.asarray(ye)
+    for r in range(rounds):
+        p, o, _ = tr.run_round(r, p, o, cx, cy, xe, ye)
+
+    from repro.core.fl import evaluate
+    pacc = float(jnp.mean(evaluate(bundle.apply_fn, p, jnp.asarray(tx),
+                                   jnp.asarray(ty))))
+    return tr, pacc

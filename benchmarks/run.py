@@ -1,0 +1,41 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness:
+
+  kernels_bench    — Pallas kernels vs oracles (µs/call)
+  fig2_rewards     — paper Fig. 2 (reward trends vs cluster size)
+  table2_accuracy  — paper Table II (accuracy under label skew)
+  roofline         — §Roofline table from the dry-run artifacts
+
+``python -m benchmarks.run [--full] [--rounds N]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 3 datasets in table2 (slow on CPU)")
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--skip-table2", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    from benchmarks import fig2_rewards, kernels_bench, roofline, table2_accuracy
+
+    print("# kernels")
+    kernels_bench.main()
+    print("# fig2 (reward trends)")
+    fig2_rewards.main(rounds=min(args.rounds, 10))
+    if not args.skip_table2:
+        print("# table2 (accuracy)")
+        table2_accuracy.main(args.full, args.rounds)
+    print("# roofline")
+    roofline.main()
+    print(f"bench,total_wall_s,{time.time()-t0:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

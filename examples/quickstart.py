@@ -1,0 +1,47 @@
+"""Quickstart: BFLN vs FedAvg on skewed synthetic data in under a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FederatedTrainer, ModelBundle, make_bfln, make_fedavg
+from repro.core.fl import evaluate
+from repro.data import dirichlet_partition, make_classification_dataset, pack_clients
+from repro.data.partition import sample_probe_batch
+from repro.models import classifier as clf
+from repro.optim import adam
+
+
+def main():
+    n_clients, rounds, bias = 8, 5, 0.1
+    (xt, yt), (xe, ye) = make_classification_dataset("synth10", seed=0)
+    parts = dirichlet_partition(yt, n_clients, bias, seed=0)
+    cx, cy, tx, ty = pack_clients(xt, yt, parts, n_batches=4, batch_size=64)
+    probe = jnp.asarray(sample_probe_batch(xt, yt, category=3, psi=16))
+
+    cfg = clf.MLPConfig(in_dim=64, hidden=(128,), rep_dim=64, num_classes=10)
+    bundle = ModelBundle(functools.partial(clf.apply, cfg),
+                         functools.partial(clf.embed, cfg), 10)
+
+    for name, make in [("bfln", lambda: make_bfln(bundle, probe, n_clusters=3)),
+                       ("fedavg", lambda: make_fedavg(bundle))]:
+        sp = clf.init_stacked(cfg, jax.random.PRNGKey(0), n_clients)
+        tr = FederatedTrainer(bundle, make(), adam(1e-3), local_epochs=3,
+                              n_clusters=3, use_chain=(name == "bfln"))
+        p = tr.fit(sp, jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(xe),
+                   jnp.asarray(ye), rounds=rounds, log_every=1)
+        pacc = float(jnp.mean(evaluate(bundle.apply_fn, p, jnp.asarray(tx),
+                                       jnp.asarray(ty))))
+        print(f"== {name}: personalized accuracy {pacc:.4f}")
+        if name == "bfln":
+            print(f"   chain valid={tr.chain.validate()} "
+                  f"blocks={len(tr.chain.blocks)} "
+                  f"ledger conserved={tr.ledger.conserved()} "
+                  f"balances={tr.ledger.balances.round(2).tolist()}")
+
+
+if __name__ == "__main__":
+    main()

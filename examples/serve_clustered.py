@@ -1,0 +1,54 @@
+"""Clustered serving: batched greedy decoding against per-cluster
+personalized LMs using the KV-cache serve path.
+
+After BFLN training, each spectral cluster owns a personalized model (the
+cluster FedAvg). This example trains a tiny LM briefly, forks per-cluster
+variants, then serves batched requests routed to their cluster's model —
+exercising `init_cache`/`decode_step` end to end on CPU.
+
+    PYTHONPATH=src python examples/serve_clustered.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.data.lm import batch_stream, make_token_stream
+from repro.models.lm import greedy_generate, make_train_step
+from repro.models.transformer import init_params
+from repro.optim import adamw
+
+
+def main():
+    cfg = ARCHS["h2o-danube-3-4b"].reduced(
+        n_layers=2, d_model=128, d_ff=256, vocab_size=256)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    # brief pre-training so generations are non-degenerate
+    opt = adamw(3e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    opt_state = opt.init(params)
+    toks = make_token_stream(cfg.vocab_size, 20000, seed=0)
+    for x, y in batch_stream(toks, batch=8, seq_len=32, n_steps=30, seed=0):
+        loss, params, opt_state = step(params, opt_state,
+                                       {"tokens": jnp.asarray(x),
+                                        "labels": jnp.asarray(y)})
+    print(f"pre-trained tiny LM, final loss {float(loss):.3f}")
+
+    # fork 3 "cluster" variants (stand-ins for per-cluster FedAvg outputs)
+    clusters = [jax.tree.map(lambda p, s=s: p * (1.0 + 0.001 * s), params)
+                for s in range(3)]
+
+    # batched serving: route each request batch to its cluster's model
+    prompts = jnp.asarray([[5, 17, 42, 7], [101, 3, 9, 55]])
+    for cid, cparams in enumerate(clusters):
+        t0 = time.time()
+        out = greedy_generate(cfg, cparams, prompts, max_new=12, seq_len=64)
+        dt = (time.time() - t0) * 1000
+        print(f"cluster {cid}: generated {out.shape[1] - prompts.shape[1]} "
+              f"tokens/req in {dt:.0f} ms -> {out[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

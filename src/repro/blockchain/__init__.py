@@ -1,0 +1,3 @@
+from repro.blockchain.chain import Block, Blockchain, hash_params  # noqa: F401
+from repro.blockchain.ledger import TokenLedger  # noqa: F401
+from repro.blockchain.txpool import Transaction, TxPool  # noqa: F401

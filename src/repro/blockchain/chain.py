@@ -1,0 +1,131 @@
+"""Deterministic in-process blockchain (paper §IV-C + Fig. 1 steps 2/5/6).
+
+Permissioned DPoS-style chain: block producers come from CACC's packing queue
+(cluster-centroid clients) and take turns; there is no PoW.  Blocks carry two
+transaction kinds:
+
+  * ``model_hash`` — a training client commits the SHA-256 of its local model
+    before aggregation (Fig. 1 step 2),
+  * ``agg_hash``   — the producer (aggregation client) records the hashes of
+    every model it actually aggregated (Fig. 1 step 5).
+
+Consensus (Fig. 1 step 6) — :meth:`Blockchain.verify_round` — rewards a client
+iff its committed hash appears in the producer's aggregation transaction.
+Everything is deterministic and replayable: hashing is canonical over leaf
+paths + raw bytes, so any validator reproduces identical block hashes.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.blockchain.txpool import Transaction, TxPool
+
+Pytree = Any
+
+
+def hash_params(params: Pytree) -> str:
+    """Canonical SHA-256 of a parameter pytree (path-sorted leaf bytes)."""
+    h = hashlib.sha256()
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in sorted(leaves, key=lambda kv: jax.tree_util.keystr(kv[0])):
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _merkle_root(tx_hashes: list[str]) -> str:
+    """Pairwise SHA-256 merkle root (duplicate last on odd levels)."""
+    if not tx_hashes:
+        return hashlib.sha256(b"empty").hexdigest()
+    level = list(tx_hashes)
+    while len(level) > 1:
+        if len(level) % 2:
+            level.append(level[-1])
+        level = [hashlib.sha256((a + b).encode()).hexdigest()
+                 for a, b in zip(level[::2], level[1::2])]
+    return level[0]
+
+
+@dataclass(frozen=True)
+class Block:
+    index: int
+    round_idx: int
+    producer: int                  # client id of the packing (aggregation) client
+    prev_hash: str
+    merkle_root: str
+    transactions: tuple[Transaction, ...]
+
+    def header(self) -> dict:
+        return {"index": self.index, "round": self.round_idx,
+                "producer": self.producer, "prev": self.prev_hash,
+                "merkle": self.merkle_root}
+
+    def block_hash(self) -> str:
+        return hashlib.sha256(
+            json.dumps(self.header(), sort_keys=True).encode()).hexdigest()
+
+
+@dataclass
+class Blockchain:
+    blocks: list[Block] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.blocks:
+            genesis = Block(0, -1, -1, "0" * 64, _merkle_root([]), ())
+            self.blocks.append(genesis)
+
+    @property
+    def head(self) -> Block:
+        return self.blocks[-1]
+
+    def pack_block(self, round_idx: int, producer: int, pool: TxPool) -> Block:
+        """Producer drains the tx pool into a new block (DPoS slot)."""
+        txs = tuple(pool.drain())
+        block = Block(
+            index=len(self.blocks),
+            round_idx=round_idx,
+            producer=producer,
+            prev_hash=self.head.block_hash(),
+            merkle_root=_merkle_root([t.tx_hash() for t in txs]),
+            transactions=txs,
+        )
+        self.blocks.append(block)
+        return block
+
+    def validate(self) -> bool:
+        """Full-chain validation: hash links + merkle roots."""
+        for prev, cur in zip(self.blocks, self.blocks[1:]):
+            if cur.prev_hash != prev.block_hash():
+                return False
+            if cur.merkle_root != _merkle_root([t.tx_hash() for t in cur.transactions]):
+                return False
+        return True
+
+    # ------------------------------------------------------------------ #
+    # Consensus verification (Fig. 1 step 6)
+    # ------------------------------------------------------------------ #
+
+    def verify_round(self, block: Block, n_clients: int) -> np.ndarray:
+        """Boolean mask (n_clients,): client i's committed ``model_hash``
+        appears among the producer's ``agg_hash`` entries in ``block``."""
+        committed: dict[int, str] = {}
+        aggregated: set[str] = set()
+        for tx in block.transactions:
+            if tx.kind == "model_hash":
+                committed[tx.sender] = tx.payload
+            elif tx.kind == "agg_hash":
+                aggregated.update(json.loads(tx.payload))
+        ok = np.zeros((n_clients,), dtype=bool)
+        for cid, h in committed.items():
+            if 0 <= cid < n_clients and h in aggregated:
+                ok[cid] = True
+        return ok

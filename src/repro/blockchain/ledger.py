@@ -1,0 +1,49 @@
+"""Token ledger for the BFLN incentive mechanism.
+
+Authoritative host-side balances; the jittable mirror lives in
+``repro.core.incentives.apply_round_settlement``.  Conservation invariant:
+tokens only enter via ``mint`` (initial stake + round reward pool) and total
+supply equals Σ balances at all times (property-tested).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class TokenLedger:
+    n_clients: int
+    initial_stake: float = 5.0
+    balances: np.ndarray = field(init=False)
+    minted: float = field(init=False)
+
+    def __post_init__(self):
+        self.balances = np.full((self.n_clients,), float(self.initial_stake))
+        self.minted = float(self.initial_stake) * self.n_clients
+
+    def mint_reward_pool(self, amount: float) -> float:
+        self.minted += float(amount)
+        return float(amount)
+
+    def settle_round(self, client_reward: np.ndarray, fee: float,
+                     producer: int, verified: np.ndarray) -> None:
+        """Verified clients receive their reward and pay the aggregation fee;
+        the producer collects all fees; unverified rewards are burned (the
+        unclaimed part of the pool never enters balances)."""
+        client_reward = np.asarray(client_reward, dtype=np.float64)
+        verified = np.asarray(verified, dtype=bool)
+        paid = np.where(verified, client_reward, 0.0)
+        fees = np.where(verified, fee, 0.0)
+        self.balances = self.balances + paid - fees
+        self.balances[producer] += fees.sum()
+        # burned tokens leave supply
+        self.minted -= float(np.where(~verified, client_reward, 0.0).sum())
+
+    def total_supply(self) -> float:
+        return float(self.balances.sum())
+
+    def conserved(self, rtol: float = 1e-6) -> bool:
+        tol = rtol * max(1.0, abs(self.minted))
+        return abs(self.total_supply() - self.minted) <= tol

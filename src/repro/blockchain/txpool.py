@@ -1,0 +1,37 @@
+"""Transaction pool for the BFLN chain."""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Transaction:
+    kind: str        # "model_hash" | "agg_hash" | "reward" | "fee" | "stake"
+    sender: int      # client id (-1 = network)
+    payload: str     # hash hex / JSON body
+    round_idx: int
+
+    def tx_hash(self) -> str:
+        body = json.dumps(
+            {"kind": self.kind, "sender": self.sender,
+             "payload": self.payload, "round": self.round_idx},
+            sort_keys=True)
+        return hashlib.sha256(body.encode()).hexdigest()
+
+
+@dataclass
+class TxPool:
+    pending: list[Transaction] = field(default_factory=list)
+
+    def submit(self, tx: Transaction) -> str:
+        self.pending.append(tx)
+        return tx.tx_hash()
+
+    def drain(self) -> list[Transaction]:
+        txs, self.pending = self.pending, []
+        return txs
+
+    def __len__(self) -> int:
+        return len(self.pending)

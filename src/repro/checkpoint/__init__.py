@@ -1,0 +1,1 @@
+from repro.checkpoint.io import load_pytree, restore_trainer_state, save_pytree, save_trainer_state  # noqa: F401

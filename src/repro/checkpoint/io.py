@@ -1,0 +1,79 @@
+"""NPZ-based pytree checkpointing (+ blockchain state).
+
+Leaves are stored under their flattened key-paths, so any nesting of
+dict/list/tuple round-trips exactly (structure is stored alongside).
+Atomic writes: temp file + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def save_pytree(path: str, tree: Pytree) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {}
+    dtypes = {}
+    for i, x in enumerate(leaves):
+        arr = np.asarray(jax.device_get(x))
+        dtypes[i] = str(arr.dtype)
+        if arr.dtype.kind == "V" or str(arr.dtype) not in np.sctypeDict:
+            # non-native dtypes (bfloat16, fp8 via ml_dtypes): store raw bytes
+            arrays[f"leaf_{i}"] = arr.view(np.uint8).reshape(arr.shape + (-1,)) \
+                if arr.ndim else np.frombuffer(arr.tobytes(), np.uint8)
+            arrays[f"shape_{i}"] = np.asarray(arr.shape, np.int64)
+        else:
+            arrays[f"leaf_{i}"] = arr
+    payload = {"treedef": pickle.dumps(treedef), "n": len(leaves),
+               "dtypes": dtypes}
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(pickle.dumps(payload), np.uint8), **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str) -> Pytree:
+    import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
+
+    with np.load(path, allow_pickle=False) as z:
+        meta = pickle.loads(z["__meta__"].tobytes())
+        treedef = pickle.loads(meta["treedef"])
+        leaves = []
+        for i in range(meta["n"]):
+            arr = z[f"leaf_{i}"]
+            want = meta.get("dtypes", {}).get(i, str(arr.dtype))
+            if f"shape_{i}" in z:
+                shape = tuple(z[f"shape_{i}"])
+                arr = arr.reshape(-1).view(np.dtype(want)).reshape(shape)
+            elif str(arr.dtype) != want:
+                arr = arr.astype(np.dtype(want))
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_trainer_state(path: str, params: Pytree, opt_state: Pytree,
+                       round_idx: int, extra: dict | None = None) -> None:
+    save_pytree(path, {"params": params, "opt_state": opt_state,
+                       "round_idx": np.asarray(round_idx),
+                       "extra_json": np.frombuffer(
+                           json.dumps(extra or {}).encode(), np.uint8)})
+
+
+def restore_trainer_state(path: str):
+    state = load_pytree(path)
+    extra = json.loads(bytes(state["extra_json"]).decode())
+    return state["params"], state["opt_state"], int(state["round_idx"]), extra

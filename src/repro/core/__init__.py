@@ -1,0 +1,25 @@
+"""BFLN core: the paper's contribution as composable JAX modules.
+
+* PAA  — prototype extraction + Pearson similarity + spectral clustering +
+         cluster-masked FedAvg (`aggregation.paa_round`)
+* CACC — centroid-representative selection + DPoS packing queue (`consensus`)
+* Incentives — cluster-size-superlinear reward allocation (`incentives`)
+* Baselines — FedAvg / FedProx / FedProto / FedHKD (`baselines`)
+* Round driver — jitted FL round + host-side blockchain protocol (`round`)
+"""
+from repro.core.aggregation import PAAResult, cluster_mean_params, paa_round  # noqa: F401
+from repro.core.baselines import (  # noqa: F401
+    ModelBundle,
+    Strategy,
+    make_bfln,
+    make_fedavg,
+    make_fedhkd,
+    make_fedproto,
+    make_fedprox,
+)
+from repro.core.consensus import packing_queue, producer_for_round, select_centroid_clients  # noqa: F401
+from repro.core.incentives import RewardAllocation, allocate_rewards  # noqa: F401
+from repro.core.pearson import pearson_affinity, pearson_matrix  # noqa: F401
+from repro.core.prototypes import classwise_prototypes, client_prototypes, prototype  # noqa: F401
+from repro.core.round import FederatedTrainer, RoundRecord  # noqa: F401
+from repro.core.spectral import kmeans, spectral_cluster, spectral_embedding  # noqa: F401

@@ -1,0 +1,217 @@
+"""Federated learning strategies: the paper's four baselines + BFLN itself.
+
+A :class:`Strategy` is a triple of pure functions consumed by
+``repro.core.round``:
+
+    round_extras(stacked_params, cx, cy) -> extras   # what the server ships
+    local_loss(params, x, y, extras) -> scalar       # client objective
+    aggregate(stacked_params, cx, cy) -> AggOut      # server aggregation
+
+``extras`` always carries a leading client axis (it is vmapped alongside the
+client during local training).  Every baseline is a real implementation, not a
+stub — the paper compares against all four in Table II.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import paa_round
+from repro.core.prototypes import classwise_prototypes
+from repro.utils.tree import tree_sq_norm, tree_sub
+
+Pytree = Any
+
+
+class ModelBundle(NamedTuple):
+    """The model as the FL layer sees it (architecture-agnostic)."""
+    apply_fn: Callable[[Pytree, jax.Array], jax.Array]   # params, x -> logits
+    embed_fn: Callable[[Pytree, jax.Array], jax.Array]   # params, x -> representations
+    num_classes: int
+
+
+class AggOut(NamedTuple):
+    stacked_params: Pytree
+    labels: jax.Array | None = None          # cluster assignment (BFLN only)
+    cluster_sizes: jax.Array | None = None   # (C,) (BFLN only)
+    corr: jax.Array | None = None            # Pearson matrix (BFLN only)
+
+
+class Strategy(NamedTuple):
+    name: str
+    round_extras: Callable[[Pytree, jax.Array, jax.Array], Any]
+    local_loss: Callable[[Pytree, jax.Array, jax.Array, Any], jax.Array]
+    aggregate: Callable[[Pytree, jax.Array, jax.Array], AggOut]
+
+
+def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def _flatten_batches(cx: jax.Array, cy: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(m, nb, B, ...) -> (m, nb*B, ...)."""
+    m = cx.shape[0]
+    return (cx.reshape(m, -1, *cx.shape[3:]), cy.reshape(m, -1))
+
+
+def _global_mean(stacked_params: Pytree) -> Pytree:
+    mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked_params)
+    m = jax.tree.leaves(stacked_params)[0].shape[0]
+    return jax.tree.map(lambda g: jnp.broadcast_to(g[None], (m,) + g.shape), mean)
+
+
+# --------------------------------------------------------------------------- #
+# FedAvg (McMahan et al., 2017)
+# --------------------------------------------------------------------------- #
+
+def make_fedavg(model: ModelBundle) -> Strategy:
+    def round_extras(stacked_params, cx, cy):
+        m = cx.shape[0]
+        return jnp.zeros((m,), jnp.float32)  # no server payload
+
+    def local_loss(params, x, y, extras):
+        return _xent(model.apply_fn(params, x), y)
+
+    def aggregate(stacked_params, cx, cy):
+        return AggOut(_global_mean(stacked_params))
+
+    return Strategy("fedavg", round_extras, local_loss, aggregate)
+
+
+# --------------------------------------------------------------------------- #
+# FedProx (Li et al., 2018): CE + (µ/2)‖w − w_global‖²
+# --------------------------------------------------------------------------- #
+
+def make_fedprox(model: ModelBundle, mu: float = 0.01) -> Strategy:
+    def round_extras(stacked_params, cx, cy):
+        return _global_mean(stacked_params)  # the anchor, per client
+
+    def local_loss(params, x, y, anchor):
+        ce = _xent(model.apply_fn(params, x), y)
+        prox = 0.5 * mu * tree_sq_norm(tree_sub(params, anchor))
+        return ce + prox
+
+    def aggregate(stacked_params, cx, cy):
+        return AggOut(_global_mean(stacked_params))
+
+    return Strategy("fedprox", round_extras, local_loss, aggregate)
+
+
+# --------------------------------------------------------------------------- #
+# FedProto (Tan et al., 2022): only class prototypes are shared; models stay
+# personal.  Local objective: CE + λ‖proto_c(batch) − global_proto_c‖².
+# --------------------------------------------------------------------------- #
+
+def make_fedproto(model: ModelBundle, lam: float = 1.0) -> Strategy:
+    K = model.num_classes
+
+    def _client_protos(stacked_params, cx, cy):
+        fx, fy = _flatten_batches(cx, cy)
+
+        def one(params, x, y):
+            return classwise_prototypes(model.embed_fn, params, x, y, K)
+
+        return jax.vmap(one)(stacked_params, fx, fy)  # (m, K, D), (m, K)
+
+    def round_extras(stacked_params, cx, cy):
+        protos, counts = _client_protos(stacked_params, cx, cy)
+        w = counts / jnp.maximum(jnp.sum(counts, axis=0, keepdims=True), 1.0)
+        global_protos = jnp.sum(protos * w[..., None], axis=0)  # (K, D)
+        m = cx.shape[0]
+        return jnp.broadcast_to(global_protos[None], (m,) + global_protos.shape)
+
+    def local_loss(params, x, y, global_protos):
+        logits = model.apply_fn(params, x)
+        ce = _xent(logits, y)
+        protos, counts = classwise_prototypes(model.embed_fn, params, x, y, K)
+        mask = (counts > 0).astype(jnp.float32)
+        d = jnp.sum(jnp.square(protos - global_protos), axis=-1)  # (K,)
+        align = jnp.sum(d * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + lam * align
+
+    def aggregate(stacked_params, cx, cy):
+        return AggOut(stacked_params)  # models are never averaged
+
+    return Strategy("fedproto", round_extras, local_loss, aggregate)
+
+
+# --------------------------------------------------------------------------- #
+# FedHKD (Chen & Vikalo, 2023): clients ship "hyper-knowledge" — per-class
+# mean representations AND mean soft predictions; the server aggregates both
+# and clients distil against them.  Built on FedAvg model averaging.
+# --------------------------------------------------------------------------- #
+
+def make_fedhkd(model: ModelBundle, lam_rep: float = 0.05,
+                lam_soft: float = 0.05, temp: float = 2.0) -> Strategy:
+    K = model.num_classes
+
+    def _hyper_knowledge(stacked_params, cx, cy):
+        fx, fy = _flatten_batches(cx, cy)
+
+        def one(params, x, y):
+            protos, counts = classwise_prototypes(model.embed_fn, params, x, y, K)
+            soft = jax.nn.softmax(model.apply_fn(params, x) / temp, axis=-1)
+            onehot = jax.nn.one_hot(y, K, dtype=soft.dtype)
+            soft_per_class = (onehot.T @ soft) / jnp.maximum(counts, 1.0)[:, None]
+            return protos, soft_per_class, counts
+
+        return jax.vmap(one)(stacked_params, fx, fy)
+
+    def round_extras(stacked_params, cx, cy):
+        protos, softs, counts = _hyper_knowledge(stacked_params, cx, cy)
+        w = counts / jnp.maximum(jnp.sum(counts, axis=0, keepdims=True), 1.0)
+        H = jnp.sum(protos * w[..., None], axis=0)        # (K, D)
+        Q = jnp.sum(softs * w[..., None], axis=0)         # (K, K)
+        m = cx.shape[0]
+        return (jnp.broadcast_to(H[None], (m,) + H.shape),
+                jnp.broadcast_to(Q[None], (m,) + Q.shape))
+
+    def local_loss(params, x, y, extras):
+        H, Q = extras
+        logits = model.apply_fn(params, x)
+        ce = _xent(logits, y)
+        reps = model.embed_fn(params, x)
+        rep_loss = jnp.mean(jnp.sum(jnp.square(reps - H[y]), axis=-1))
+        logp = jax.nn.log_softmax(logits / temp, axis=-1)
+        q = jnp.maximum(Q[y], 1e-8)
+        kd = jnp.mean(jnp.sum(q * (jnp.log(q) - logp), axis=-1))
+        return ce + lam_rep * rep_loss + lam_soft * kd
+
+    def aggregate(stacked_params, cx, cy):
+        return AggOut(_global_mean(stacked_params))
+
+    return Strategy("fedhkd", round_extras, local_loss, aggregate)
+
+
+# --------------------------------------------------------------------------- #
+# BFLN (this paper): plain CE locally; PAA clustered aggregation server-side.
+# The probe batch (ψ same-category samples, paper §IV-B) is sampled by the
+# aggregation client and closed over per round by the caller.
+# --------------------------------------------------------------------------- #
+
+def make_bfln(model: ModelBundle, probe_x: jax.Array, n_clusters: int,
+              kmeans_iters: int = 25) -> Strategy:
+    def round_extras(stacked_params, cx, cy):
+        m = cx.shape[0]
+        return jnp.zeros((m,), jnp.float32)
+
+    def local_loss(params, x, y, extras):
+        return _xent(model.apply_fn(params, x), y)
+
+    def aggregate(stacked_params, cx, cy):
+        res = paa_round(model.embed_fn, stacked_params, probe_x, n_clusters,
+                        kmeans_iters=kmeans_iters)
+        return AggOut(res.new_stacked_params, res.labels, res.cluster_sizes, res.corr)
+
+    return Strategy("bfln", round_extras, local_loss, aggregate)
+
+
+STRATEGY_FACTORIES = {
+    "fedavg": make_fedavg,
+    "fedprox": make_fedprox,
+    "fedproto": make_fedproto,
+    "fedhkd": make_fedhkd,
+}

@@ -1,0 +1,62 @@
+"""CACC — Consensus Algorithm based on Cluster Centroids (paper §IV-C).
+
+From the spectral partition, the client whose Pearson-row is Euclidean-closest
+to its cluster's centroid (Eqs. 4–6) becomes that cluster's *representative*.
+Representatives join the DPoS-style packing queue: they take turns producing
+blocks and act as the aggregation client for their turn.
+
+Centroid selection is jittable; queue rotation is trivially host-side (it is
+consumed by the blockchain layer, `repro.blockchain`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CentroidResult(NamedTuple):
+    representatives: jax.Array   # (n_clusters,) client index per cluster, -1 if empty
+    distances: jax.Array         # (m,) distance of each client to its cluster centroid
+    centroids: jax.Array         # (n_clusters, m) mean Pearson row per cluster
+
+
+def select_centroid_clients(corr: jax.Array, labels: jax.Array, n_clusters: int) -> CentroidResult:
+    """Paper Eqs. 4–6 on the Pearson matrix.
+
+    Each client i is represented by its correlation profile Ξ[i, :] (the paper's
+    𝔭 — "each point in the cluster").  The cluster centroid is the mean profile
+    (Eq. 4); each member's Euclidean distance to it is Eq. 5–6; the argmin
+    member becomes the cluster's packing-queue representative.
+    """
+    m = corr.shape[0]
+    onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)          # (m, C)
+    counts = jnp.sum(onehot, axis=0)                                        # (C,)
+    sums = onehot.T @ corr.astype(jnp.float32)                              # (C, m)
+    centroids = sums / jnp.maximum(counts, 1.0)[:, None]                    # Eq. 4
+
+    diff = corr.astype(jnp.float32) - centroids[labels]                     # Eq. 5
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=1))                           # Eq. 6
+
+    # per-cluster argmin over members only
+    big = jnp.finfo(jnp.float32).max
+    masked = jnp.where(onehot.T > 0, dist[None, :], big)                    # (C, m)
+    reps = jnp.argmin(masked, axis=1)
+    reps = jnp.where(counts > 0, reps, -1)
+    return CentroidResult(reps.astype(jnp.int32), dist, centroids)
+
+
+def packing_queue(representatives: jax.Array) -> list[int]:
+    """Host-side: ordered block-producer queue for the next epoch (empty
+    clusters dropped).  Order is cluster index — deterministic, so every
+    validator derives the same queue (DPoS slot schedule)."""
+    reps = [int(r) for r in jax.device_get(representatives)]
+    return [r for r in reps if r >= 0]
+
+
+def producer_for_round(queue: list[int], round_idx: int) -> int:
+    """Round-robin slot assignment (paper: representatives 'take turns')."""
+    if not queue:
+        raise ValueError("empty packing queue")
+    return queue[round_idx % len(queue)]

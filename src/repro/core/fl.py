@@ -1,0 +1,97 @@
+"""Federated local-training substrate.
+
+All clients train **simultaneously** via ``vmap`` over the leading client axis
+(stacked params, stacked data) — the TPU-native replacement for the paper's
+sequential 20-client loop.  Local optimisation is a ``lax.scan`` over
+(epochs × batches), so a full federated round is a single jitted program.
+
+Data layout: ``x (m, n_batches, B, ...)``, ``y (m, n_batches, B)``.  The
+Dirichlet partitioner (repro.data) resamples every client to the same number
+of batches so the stacked layout is rectangular.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+
+Pytree = Any
+# loss_fn(params, x, y, extras) -> scalar
+LossFn = Callable[[Pytree, jax.Array, jax.Array, Any], jax.Array]
+
+
+class LocalTrainResult(NamedTuple):
+    params: Pytree        # stacked (m, ...)
+    opt_state: Pytree
+    mean_loss: jax.Array  # (m,)
+
+
+def local_train(
+    loss_fn: LossFn,
+    opt: Optimizer,
+    stacked_params: Pytree,
+    stacked_opt_state: Pytree,
+    x: jax.Array,
+    y: jax.Array,
+    extras: Any,
+    epochs: int,
+) -> LocalTrainResult:
+    """Run ``epochs`` passes of minibatch SGD on every client in parallel.
+
+    ``extras`` is an arbitrary pytree of per-client auxiliary inputs (leading
+    client axis on every leaf) consumed by the strategy's loss — e.g. the
+    anchor params for FedProx, global prototypes for FedProto.
+    """
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def one_client(params, opt_state, cx, cy, cextras):
+        nb = cx.shape[0]
+
+        def step(carry, idx):
+            params, opt_state = carry
+            bx, by = cx[idx % nb], cy[idx % nb]
+            loss, grads = grad_fn(params, bx, by, cextras)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            step, (params, opt_state), jnp.arange(epochs * nb))
+        return params, opt_state, jnp.mean(losses)
+
+    params, opt_state, losses = jax.vmap(one_client)(
+        stacked_params, stacked_opt_state, x, y, extras)
+    return LocalTrainResult(params, opt_state, losses)
+
+
+def evaluate(
+    predict_fn: Callable[[Pytree, jax.Array], jax.Array],
+    stacked_params: Pytree,
+    x: jax.Array,
+    y: jax.Array,
+) -> jax.Array:
+    """Per-client accuracy on (m, N, ...) eval data -> (m,)."""
+
+    def one(params, cx, cy):
+        logits = predict_fn(params, cx)
+        return jnp.mean((jnp.argmax(logits, axis=-1) == cy).astype(jnp.float32))
+
+    return jax.vmap(one)(stacked_params, x, y)
+
+
+def global_evaluate(
+    predict_fn: Callable[[Pytree, jax.Array], jax.Array],
+    stacked_params: Pytree,
+    x: jax.Array,
+    y: jax.Array,
+) -> jax.Array:
+    """Mean accuracy of each client's personalized model on the *shared* test
+    set (the paper's Table II metric is mean client accuracy)."""
+
+    def one(params):
+        logits = predict_fn(params, x)
+        return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+    return jnp.mean(jax.vmap(one)(stacked_params))

@@ -1,0 +1,72 @@
+"""Incentive mechanism based on cluster membership size (paper §IV-C-1).
+
+    Γ(n_i) = κ · n_i^ρ,   κ = ℜ / Σ_i n_i^ρ,   ρ > 1          (Eqs. 7–8)
+    per-client reward  r = Γ(n_i) / n_i
+    aggregation fee    g = κ / N                               (Eq. 9)
+
+Properties (property-tested in tests/test_incentives.py):
+  * ΣΓ(n_i) = ℜ exactly (token conservation),
+  * per-capita reward κ·n_i^{ρ-1} strictly increases with cluster size for ρ>1,
+  * clients in the same cluster receive equal shares.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RewardAllocation(NamedTuple):
+    cluster_reward: jax.Array   # (C,) Γ(n_i)
+    client_reward: jax.Array    # (m,) r_k for every client
+    kappa: jax.Array            # scalar κ
+    fee: jax.Array              # scalar g = κ / N
+
+
+def allocate_rewards(
+    labels: jax.Array,
+    n_clusters: int,
+    total_reward: float,
+    rho: float = 2.0,
+) -> RewardAllocation:
+    """Distribute the round's reward pool ℜ by cluster size.
+
+    ``labels``: (m,) cluster assignment from PAA. Empty clusters get Γ=0 and
+    do not absorb tokens (the denominator only sums over realised sizes, which
+    matches Σ n_i = N in the paper since empty clusters have n_i = 0).
+    """
+    labels = labels.astype(jnp.int32)
+    m = labels.shape[0]
+    sizes = jnp.sum(jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32), axis=0)
+    powered = jnp.where(sizes > 0, sizes ** rho, 0.0)
+    kappa = total_reward / jnp.maximum(jnp.sum(powered), 1e-12)
+    cluster_reward = kappa * powered                                  # Γ(n_i)
+    per_capita = cluster_reward / jnp.maximum(sizes, 1.0)             # Γ/n_i
+    client_reward = per_capita[labels]
+    fee = kappa / m                                                   # Eq. 9
+    return RewardAllocation(cluster_reward, client_reward, kappa, fee)
+
+
+def apply_round_settlement(
+    balances: jax.Array,
+    alloc: RewardAllocation,
+    producer: jax.Array | int,
+    verified: jax.Array,
+) -> jax.Array:
+    """Settle one round on the token ledger (jittable mirror of the blockchain
+    ledger; `repro.blockchain.ledger` is the authoritative host-side copy).
+
+    * every *verified* client receives its reward and pays the aggregation fee g,
+    * the producer (aggregation client) collects all fees,
+    * unverified clients (hash mismatch — paper's anti-freeriding rule) receive
+      nothing and pay nothing; their reward is burned rather than re-allocated,
+      matching the paper's "only if ... hash values match" wording.
+    """
+    verified = verified.astype(balances.dtype)
+    m = balances.shape[0]
+    fees = alloc.fee * verified                       # each verified client pays g
+    credit = alloc.client_reward * verified
+    balances = balances + credit - fees
+    balances = balances.at[producer].add(jnp.sum(fees))
+    return balances

@@ -1,0 +1,32 @@
+"""Pearson correlation between client prototype vectors (paper Eq. 2–3).
+
+The paper's stated reason for Pearson over cosine: it reflects the *strength*
+of linear similarity (centering removes per-model representation offsets), not
+just direction.  The m×m matrix Ξ feeds spectral clustering in PAA.
+
+The pure-jnp implementation here is the oracle; ``repro.kernels.pearson`` is
+the Pallas MXU version used on TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pearson_matrix(protos: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Ξ[i, j] = corr(𝔙_i, 𝔙_j) over feature dim.  ``protos``: (m, D) -> (m, m).
+
+    Implemented as center → normalize → gram, which is exactly Eq. 2 vectorised:
+    cov(a,b)/(σ_a σ_b) = <â, b̂> with â = (a-µ_a)/‖a-µ_a‖.
+    """
+    protos = protos.astype(jnp.float32)
+    centered = protos - jnp.mean(protos, axis=1, keepdims=True)
+    norms = jnp.linalg.norm(centered, axis=1, keepdims=True)
+    normalized = centered / jnp.maximum(norms, eps)
+    corr = normalized @ normalized.T
+    return jnp.clip(corr, -1.0, 1.0)
+
+
+def pearson_affinity(corr: jnp.ndarray) -> jnp.ndarray:
+    """Map correlations [-1, 1] to a non-negative affinity [0, 1] for spectral
+    clustering (anti-correlated models should be *maximally dissimilar*)."""
+    return (corr + 1.0) * 0.5

@@ -1,0 +1,60 @@
+"""Prototype extraction (paper Eq. 1 and the Preliminary §III-B definition).
+
+A *prototype* is the mean representation vector a model produces over a probe
+batch of ψ same-category samples.  The aggregation client holds the probe batch
+and feeds the **same** inputs through every client's local model (this is the
+key difference vs FedProto-style methods where each client computes prototypes
+on its own data — here prototypes are comparable because the inputs are shared).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def prototype(embed_fn: Callable, params: Pytree, probe_x: jax.Array) -> jax.Array:
+    """Paper Eq. 1:  𝔙 = (1/ψ) Σ_i  LM(x_i).
+
+    ``embed_fn(params, x) -> (ψ, D)`` representation vectors; returns (D,).
+    """
+    reps = embed_fn(params, probe_x)
+    return jnp.mean(reps, axis=0)
+
+
+def client_prototypes(
+    embed_fn: Callable,
+    stacked_params: Pytree,
+    probe_x: jax.Array,
+) -> jax.Array:
+    """Prototypes for every client at once.
+
+    ``stacked_params`` has a leading ``n_clients`` axis on every leaf. The probe
+    batch is broadcast (the aggregation client samples it once per round and
+    feeds the *same* data to each local model — paper §IV-B).  Returns
+    ``(n_clients, D)``.
+    """
+    return jax.vmap(lambda p: prototype(embed_fn, p, probe_x))(stacked_params)
+
+
+def classwise_prototypes(
+    embed_fn: Callable,
+    params: Pytree,
+    x: jax.Array,
+    y: jax.Array,
+    num_classes: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-class prototypes (used by the FedProto baseline).
+
+    Returns ``(protos (K, D), counts (K,))``; classes absent from the batch get
+    a zero prototype and a zero count (callers mask on counts).
+    """
+    reps = embed_fn(params, x)  # (B, D)
+    onehot = jax.nn.one_hot(y, num_classes, dtype=reps.dtype)  # (B, K)
+    sums = jnp.einsum("bk,bd->kd", onehot, reps)
+    counts = jnp.sum(onehot, axis=0)
+    protos = sums / jnp.maximum(counts, 1.0)[:, None]
+    return protos, counts

@@ -1,0 +1,159 @@
+"""The BFLN federated round driver (paper Fig. 1, steps 1–6).
+
+The jittable inner program (local training + aggregation) is wrapped by the
+host-side blockchain protocol (hash commitments, block packing, consensus
+verification, token settlement).  The same driver runs every baseline strategy
+— baselines simply skip the chain (no clustering → no CACC queue).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.blockchain import Blockchain, TokenLedger, Transaction, TxPool, hash_params
+from repro.core import consensus as cacc
+from repro.core.baselines import AggOut, ModelBundle, Strategy
+from repro.core.fl import LocalTrainResult, global_evaluate, local_train
+from repro.core.incentives import allocate_rewards
+from repro.optim import Optimizer
+from repro.utils.tree import tree_index
+
+Pytree = Any
+
+
+@dataclass
+class RoundRecord:
+    round_idx: int
+    mean_loss: float
+    accuracy: float
+    labels: np.ndarray | None = None
+    cluster_sizes: np.ndarray | None = None
+    rewards: np.ndarray | None = None
+    balances: np.ndarray | None = None
+    producer: int = -1
+    verified_frac: float = 1.0
+
+
+@dataclass
+class FederatedTrainer:
+    """Runs strategy rounds over stacked clients; BFLN adds the chain."""
+
+    model: ModelBundle
+    strategy: Strategy
+    opt: Optimizer
+    local_epochs: int = 5
+    n_clusters: int = 0              # >0 enables CACC/chain (BFLN)
+    total_reward: float = 20.0       # paper: "Local training total stake reward"
+    rho: float = 2.0                 # paper Table I
+    initial_stake: float = 5.0       # paper Table I
+    use_chain: bool = True
+    history: list[RoundRecord] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.chain = Blockchain()
+        self.pool = TxPool()
+        self.ledger: TokenLedger | None = None
+        self._queue: list[int] = []
+
+        strategy = self.strategy
+
+        @jax.jit
+        def _train_round(stacked_params, stacked_opt, cx, cy):
+            extras = strategy.round_extras(stacked_params, cx, cy)
+            res: LocalTrainResult = local_train(
+                strategy.local_loss, self.opt, stacked_params, stacked_opt,
+                cx, cy, extras, self.local_epochs)
+            agg: AggOut = strategy.aggregate(res.params, cx, cy)
+            return res.params, agg, res.opt_state, jnp.mean(res.mean_loss)
+
+        self._train_round = _train_round
+        self._eval = jax.jit(partial(global_evaluate, self.model.apply_fn))
+
+    # ------------------------------------------------------------------ #
+
+    def init(self, stacked_params: Pytree) -> tuple[Pytree, Pytree]:
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        if self.use_chain:
+            self.ledger = TokenLedger(n, self.initial_stake)
+        opt_state = jax.vmap(self.opt.init)(stacked_params)
+        return stacked_params, opt_state
+
+    def run_round(
+        self,
+        round_idx: int,
+        stacked_params: Pytree,
+        stacked_opt: Pytree,
+        cx: jax.Array,
+        cy: jax.Array,
+        test_x: jax.Array,
+        test_y: jax.Array,
+        tamper: dict[int, Pytree] | None = None,
+    ) -> tuple[Pytree, Pytree, RoundRecord]:
+        """One full BFLN round.  ``tamper`` (tests only) swaps the params a
+        client *claims* (hash-commits) for something else, exercising the
+        consensus rejection path."""
+        n = cx.shape[0]
+
+        local_params, agg, stacked_opt, mean_loss = self._train_round(
+            stacked_params, stacked_opt, cx, cy)
+
+        record = RoundRecord(round_idx, float(mean_loss), 0.0)
+
+        if self.use_chain and agg.labels is not None:
+            # -- Fig.1 step 2: clients commit local-model hashes ----------- #
+            hashes = []
+            for i in range(n):
+                committed = (tamper or {}).get(i, tree_index(local_params, i))
+                h = hash_params(committed)
+                hashes.append(hash_params(tree_index(local_params, i)))
+                self.pool.submit(Transaction("model_hash", i, h, round_idx))
+
+            # -- CACC: centroid representatives -> packing queue ----------- #
+            cres = cacc.select_centroid_clients(agg.corr, agg.labels, self.n_clusters)
+            self._queue = cacc.packing_queue(cres.representatives) or self._queue or [0]
+            producer = cacc.producer_for_round(self._queue, round_idx)
+
+            # -- Fig.1 step 5: producer records aggregated hashes ---------- #
+            self.pool.submit(Transaction(
+                "agg_hash", producer, json.dumps(sorted(hashes)), round_idx))
+            block = self.chain.pack_block(round_idx, producer, self.pool)
+
+            # -- Fig.1 step 6: consensus verification + incentives --------- #
+            verified = self.chain.verify_round(block, n)
+            alloc = allocate_rewards(agg.labels, self.n_clusters,
+                                     self.total_reward, self.rho)
+            assert self.ledger is not None
+            self.ledger.mint_reward_pool(self.total_reward)
+            self.ledger.settle_round(np.asarray(alloc.client_reward),
+                                     float(alloc.fee), producer, verified)
+
+            record.labels = np.asarray(agg.labels)
+            record.cluster_sizes = np.asarray(agg.cluster_sizes)
+            record.rewards = np.where(verified, np.asarray(alloc.client_reward), 0.0)
+            record.balances = self.ledger.balances.copy()
+            record.producer = producer
+            record.verified_frac = float(verified.mean())
+
+        record.accuracy = float(self._eval(agg.stacked_params, test_x, test_y))
+        self.history.append(record)
+        return agg.stacked_params, stacked_opt, record
+
+    def fit(self, stacked_params: Pytree, cx, cy, test_x, test_y,
+            rounds: int, log_every: int = 0,
+            log_fn: Callable[[str], None] = print) -> Pytree:
+        stacked_params, stacked_opt = self.init(stacked_params)
+        for r in range(rounds):
+            stacked_params, stacked_opt, rec = self.run_round(
+                r, stacked_params, stacked_opt, cx, cy, test_x, test_y)
+            if log_every and (r % log_every == 0 or r == rounds - 1):
+                log_fn(f"[{self.strategy.name}] round {r:3d} "
+                       f"loss={rec.mean_loss:.4f} acc={rec.accuracy:.4f}"
+                       + (f" clusters={rec.cluster_sizes.tolist()}"
+                          if rec.cluster_sizes is not None else ""))
+        return stacked_params

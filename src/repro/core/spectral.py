@@ -1,0 +1,84 @@
+"""Spectral clustering of client prototype vectors (paper §IV-B).
+
+Fully jittable: normalized graph Laplacian → ``jnp.linalg.eigh`` → k-means on
+the spectral embedding with a deterministic farthest-first initialisation and a
+fixed iteration count (``lax.fori_loop``).  The matrix is m×m with m = number
+of clients (20 in the paper), so this is never a hot spot — it stays XLA.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def normalized_laplacian(affinity: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """L_sym = I - D^{-1/2} A D^{-1/2} with zeroed self-loops."""
+    m = affinity.shape[0]
+    a = affinity * (1.0 - jnp.eye(m, dtype=affinity.dtype))
+    deg = jnp.sum(a, axis=1)
+    d_isqrt = 1.0 / jnp.sqrt(jnp.maximum(deg, eps))
+    return jnp.eye(m, dtype=affinity.dtype) - a * d_isqrt[:, None] * d_isqrt[None, :]
+
+
+def spectral_embedding(affinity: jnp.ndarray, n_clusters: int) -> jnp.ndarray:
+    """Rows of the k smallest-eigenvalue eigenvectors of L_sym, row-normalised
+    (Ng–Jordan–Weiss)."""
+    lap = normalized_laplacian(affinity.astype(jnp.float32))
+    _, vecs = jnp.linalg.eigh(lap)  # ascending eigenvalues
+    emb = vecs[:, :n_clusters]
+    norms = jnp.linalg.norm(emb, axis=1, keepdims=True)
+    return emb / jnp.maximum(norms, 1e-8)
+
+
+def _farthest_first_init(points: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Deterministic k-means init: start at point 0, greedily add the point
+    farthest from the chosen set.  Deterministic so FL rounds are replayable
+    (a requirement for blockchain verification — every validator must reproduce
+    the same clustering from the same prototypes)."""
+    m = points.shape[0]
+
+    def body(i, state):
+        centers, mind = state
+        d = jnp.sum((points - centers[i - 1][None, :]) ** 2, axis=1)
+        mind = jnp.minimum(mind, d)
+        nxt = jnp.argmax(mind)
+        centers = centers.at[i].set(points[nxt])
+        return centers, mind
+
+    centers0 = jnp.zeros((k, points.shape[1]), points.dtype).at[0].set(points[0])
+    mind0 = jnp.full((m,), jnp.inf, points.dtype)
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers0, mind0))
+    return centers
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "n_iters"))
+def kmeans(points: jnp.ndarray, n_clusters: int, n_iters: int = 25) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Lloyd's algorithm with fixed iterations.  Returns (labels (m,), centers (k, D)).
+
+    Empty clusters keep their previous center (guarded mean), matching
+    sklearn-style behaviour closely enough for m≈20 client workloads.
+    """
+    centers = _farthest_first_init(points, n_clusters)
+
+    def step(_, centers):
+        d = jnp.sum((points[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+        labels = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(labels, n_clusters, dtype=points.dtype)  # (m, k)
+        counts = jnp.sum(onehot, axis=0)  # (k,)
+        sums = onehot.T @ points  # (k, D)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        return jnp.where((counts > 0)[:, None], new, centers)
+
+    centers = jax.lax.fori_loop(0, n_iters, step, centers)
+    d = jnp.sum((points[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+    labels = jnp.argmin(d, axis=1)
+    return labels, centers
+
+
+def spectral_cluster(affinity: jnp.ndarray, n_clusters: int, n_iters: int = 25) -> jnp.ndarray:
+    """Full pipeline: affinity (m, m) -> labels (m,)."""
+    emb = spectral_embedding(affinity, n_clusters)
+    labels, _ = kmeans(emb, n_clusters, n_iters)
+    return labels

@@ -1,0 +1,3 @@
+from repro.data.partition import dirichlet_partition, pack_clients  # noqa: F401
+from repro.data.synthetic import SyntheticSpec, make_classification_dataset  # noqa: F401
+from repro.data.lm import make_token_stream  # noqa: F401

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: cluster-masked FedAvg over stacked client parameters.
+
+This is PAA's aggregation collective: clients in the same spectral cluster
+receive the mean of that cluster's parameters,
+
+    out[i] = Σ_j mix[i, j] · flat[j],   mix = onehot·diag(1/size)·onehotᵀ,
+
+i.e. an (m × m) mixing matmul against the (m × N_params) stacked-flattened
+parameter matrix.  N_params is huge (everything the clients train), so the
+kernel streams the parameter axis through VMEM in MXU-aligned tiles while the
+small mixing matrix stays resident — one pass over HBM.
+
+Grid: (n_param_tiles,); block = (m_pad, BN).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(mix_ref, x_ref, out_ref):
+    """mix (M, M) resident; x (M, BN) tile -> out (M, BN) tile."""
+    mix = mix_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] = jax.lax.dot_general(
+        mix, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def mixing_matrix(labels: jax.Array, n_clusters: int,
+                  weights: jax.Array | None = None) -> jax.Array:
+    """(m,) labels -> (m, m) cluster-mean mixing matrix (fp32)."""
+    m = labels.shape[0]
+    onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)
+    w = jnp.ones((m,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    wo = onehot * w[:, None]
+    denom = jnp.maximum(jnp.sum(wo, axis=0), 1e-9)
+    return (onehot / denom[None, :]) @ wo.T
+
+
+def cluster_agg_pallas(flat: jax.Array, mix: jax.Array, *, block_n: int = 2048,
+                       interpret: bool = False) -> jax.Array:
+    """flat (m, N) stacked client params; mix (m, m) -> (m, N) aggregated."""
+    m, n = flat.shape
+    mp = max(8, -(-m // 8) * 8)
+    bn = min(block_n, -(-n // 128) * 128)
+    np_ = -(-n // bn) * bn
+    x = flat
+    if np_ != n:
+        x = jnp.pad(x, ((0, 0), (0, np_ - n)))
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+        mix = jnp.pad(mix, ((0, mp - m), (0, mp - m)))
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((mp, mp), lambda i: (0, 0)),   # mixing matrix resident
+            pl.BlockSpec((mp, bn), lambda i: (0, i)),   # stream param tiles
+        ],
+        out_specs=pl.BlockSpec((mp, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), flat.dtype),
+        interpret=interpret,
+    )(mix, x)
+    return out[:m, :n]

@@ -1,0 +1,51 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode — the
+kernel body runs in Python on the host, which validates correctness against
+the ref.py oracles; on TPU the same calls compile via Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cluster_agg import cluster_agg_pallas, mixing_matrix  # noqa: F401
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.pearson import pearson_matrix_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_d"))
+def pearson(protos: jax.Array, block_m: int = 128, block_d: int = 512) -> jax.Array:
+    """Pearson correlation matrix (m, D) -> (m, m)."""
+    return pearson_matrix_pallas(protos, block_m=block_m, block_d=block_d,
+                                 interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "block_n"))
+def cluster_aggregate(flat: jax.Array, labels: jax.Array, n_clusters: int,
+                      block_n: int = 2048) -> jax.Array:
+    """Cluster-masked FedAvg over stacked flattened client params."""
+    mix = mixing_matrix(labels, n_clusters)
+    return cluster_agg_pallas(flat, mix, block_n=block_n, interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: int = 0, block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Flash attention (causal / SWA, GQA)."""
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=_on_cpu())
+
+
+@jax.jit
+def rwkv6_wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, s0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 wkv recurrence; returns (y, final state)."""
+    return _rwkv6(r, k, v, w, u, s0, interpret=_on_cpu())

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pearson_ref(protos: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """(m, D) -> (m, m); numerically identical formulation to the kernel."""
+    x = protos.astype(jnp.float32)
+    c = x - jnp.mean(x, axis=1, keepdims=True)
+    n = jnp.maximum(jnp.linalg.norm(c, axis=1, keepdims=True), eps)
+    return jnp.clip((c / n) @ (c / n).T, -1.0, 1.0)
+
+
+def cluster_agg_ref(flat: jnp.ndarray, mix: jnp.ndarray) -> jnp.ndarray:
+    """(m, N), (m, m) -> (m, N)."""
+    return (mix @ flat.astype(jnp.float32)).astype(flat.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive softmax attention with GQA; (B,S,Hq,hd)x(B,S,Hkv,hd)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32) / (hd ** 0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """lax.scan oracle.  r/k/v/w (B,H,T,hd); u (H,hd); s0 (B,H,hd,hd)."""
+    rt = r.transpose(2, 0, 1, 3).astype(jnp.float32)
+    kt = k.transpose(2, 0, 1, 3).astype(jnp.float32)
+    vt = v.transpose(2, 0, 1, 3).astype(jnp.float32)
+    wt = w.transpose(2, 0, 1, 3).astype(jnp.float32)
+
+    def step(s, x):
+        r_, k_, v_, w_ = x
+        kv = k_[..., :, None] * v_[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_, s + u[None, :, :, None] * kv)
+        s = s * w_[..., :, None] + kv
+        return s, y
+
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), (rt, kt, vt, wt))
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), sT

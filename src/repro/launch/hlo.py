@@ -1,0 +1,136 @@
+"""Post-SPMD HLO parsing: collective byte accounting for the roofline.
+
+``compiled.as_text()`` shows the *per-device* partitioned module, so summed
+operand bytes are bytes-through-each-chip; the roofline collective term is
+``local_bytes / link_bw``.
+
+XLA's ``cost_analysis`` counts while-loop (lax.scan) bodies **once**, ignoring
+trip counts — our models scan over layer periods, so naive sums undercount by
+~n_layers.  This parser is *computation-aware*: it maps every collective to
+its enclosing HLO computation, resolves the while-loop nesting chain via the
+``known_trip_count`` backend_config, and multiplies bytes by the product of
+trip counts.  Convention: each collective contributes its *output* bytes
+(ring all-reduce moves ~2×; we state the convention rather than model each
+algorithm).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+("
+    + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its lines."""
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and "{" in line:
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps
+
+
+def computation_multipliers(hlo_text: str) -> dict[str, int]:
+    """Execution count per computation (product of enclosing scan trips)."""
+    comps = _split_computations(hlo_text)
+    # body computation -> (parent computation, trip count)
+    parent: dict[str, tuple[str, int]] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m and m.group(2):
+                body = m.group(2)
+                t = _TRIP_RE.search(line)
+                trips = int(t.group(1)) if t else 1
+                parent[body] = (cname, trips)
+                cond = m.group(1)
+                parent.setdefault(cond, (cname, trips))
+
+    mult: dict[str, int] = {}
+
+    def resolve(name: str, depth: int = 0) -> int:
+        if name in mult:
+            return mult[name]
+        if depth > 64 or name not in parent:
+            mult[name] = 1
+            return 1
+        pname, trips = parent[name]
+        m = resolve(pname, depth + 1) * trips
+        mult[name] = m
+        return m
+
+    for cname in comps:
+        resolve(cname)
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Trip-count-weighted output bytes per collective kind (per-device)."""
+    comps = _split_computations(hlo_text)
+    mult = computation_multipliers(hlo_text)
+    totals: dict[str, int] = defaultdict(int)
+    for cname, lines in comps.items():
+        w = mult.get(cname, 1)
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            tuple_body, dtype, dims, kind = m.groups()
+            if tuple_body is not None:
+                size = sum(_shape_bytes(dt, dm)
+                           for dt, dm in _SHAPE_RE.findall(tuple_body))
+            else:
+                size = _shape_bytes(dtype, dims)
+            totals[kind] += size * w
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return dict(totals)
+
+
+def collective_counts(hlo_text: str) -> dict[str, int]:
+    """Trip-count-weighted number of collective launches (per-device)."""
+    comps = _split_computations(hlo_text)
+    mult = computation_multipliers(hlo_text)
+    counts: dict[str, int] = defaultdict(int)
+    for cname, lines in comps.items():
+        w = mult.get(cname, 1)
+        for line in lines:
+            m = _OP_RE.search(line)
+            if m:
+                counts[m.group(4)] += w
+    return dict(counts)

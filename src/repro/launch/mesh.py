@@ -1,0 +1,42 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Functions, not module-level constants — importing this module never touches
+jax device state (critical: the dry-run sets XLA_FLAGS before first jax use,
+while tests/benches must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         dm_shape: tuple[int, int] | None = None):
+    """16×16 = 256 chips single pod; 2×16×16 = 512 chips across two pods.
+
+    ``dm_shape`` overrides the (data, model) factorisation (same chip count)
+    — e.g. (32, 8) keeps attention-head sharding divisible for archs with few
+    (GQA) heads; see EXPERIMENTS.md §Perf.
+    """
+    dm = dm_shape or (16, 16)
+    assert dm[0] * dm[1] == 256, dm
+    shape = (2, *dm) if multi_pod else dm
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,172 @@
+"""Parameter / activation sharding rules (GSPMD PartitionSpecs).
+
+Megatron-style 1D tensor parallelism over the ``model`` axis, optionally
+combined with FSDP-style sharding of the complementary weight dim over the
+``data`` axis (``sharding_mode="fsdp_tp"`` — required for the ≥300B configs
+so params + Adam state fit 16 GB/chip).
+
+Rules are name-based over the parameter tree's key paths, with an automatic
+divisibility guard: a proposed axis is dropped if the dim is not divisible by
+the mesh axis size (e.g. whisper's 51866 vocab over 16-way model axis), so
+every assigned architecture lowers without bespoke cases.  Stacked layer
+params (leading ``n_periods`` axis) get their spec shifted by one dim.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# fused-projection inputs -> shard OUT features on `model`
+_IN_KEYS = {"q", "k", "v", "qc", "kc", "vc", "w_gate", "w_up", "in_proj",
+            "dt_proj", "w_in", "w_rec", "w_r", "w_k", "w_v", "w_g", "lm_head"}
+# projections back to d_model -> shard IN features on `model`
+_OUT_KEYS = {"o", "oc", "w_down", "out_proj", "w_o", "w_out", "x_proj", "A_log"}
+# 1-D vectors laid out over the sharded feature dim
+_VEC_KEYS = {"conv_b", "dt_bias", "D", "w0", "ln_scale"}
+_REPLICATED = {"router", "mu", "u", "scale", "bias", "w_lora_a", "w_lora_b"}
+
+
+def _leaf_key(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "layers"
+               for e in path)
+
+
+def _div_ok(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    names = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return dim % size == 0
+
+
+def _guard(spec: tuple, shape: tuple[int, ...], mesh) -> P:
+    """Drop any proposed axis the dim size can't honour."""
+    fixed = tuple(a if _div_ok(shape[i], mesh, a) else None
+                  for i, a in enumerate(spec))
+    return P(*fixed)
+
+
+def param_pspecs(cfg, params_shape: Pytree, mesh) -> Pytree:
+    """PartitionSpec tree matching ``params_shape`` (ShapeDtypeStructs).
+
+    Modes: ``tp`` (1D tensor parallel), ``fsdp_tp`` (+ FSDP over data),
+    ``ep_tp`` (like fsdp_tp, but MoE expert tables shard the *expert* axis
+    over `data` — expert parallelism — instead of FSDP'ing D; tokens move via
+    all-to-all instead of all-gathering hundreds of GB of expert weights).
+    """
+    fsdp = "data" if cfg.sharding_mode in ("fsdp_tp", "ep_tp") else None
+    ep = "data" if cfg.sharding_mode == "ep_tp" else None
+
+    def rule(path, leaf) -> P:
+        key = _leaf_key(path)
+        shape = leaf.shape
+        nd = len(shape)
+        stacked = _is_stacked(path)
+        core = shape[1:] if stacked else shape
+        cnd = len(core)
+
+        if key == "embed":
+            spec: tuple = ("model", fsdp)
+        elif key in _REPLICATED or cnd == 0:
+            spec = (None,) * cnd
+        elif key in _VEC_KEYS and cnd == 1:
+            spec = ("model",)
+        elif key == "conv_w":
+            spec = (None, "model")
+        elif key in _IN_KEYS and cnd == 2:
+            spec = (fsdp, "model")
+        elif key in _IN_KEYS and cnd == 3:        # MoE expert tables (E, D, F)
+            spec = (ep, None, "model") if ep else (None, fsdp, "model")
+        elif key in _OUT_KEYS and cnd == 2:
+            spec = ("model", fsdp)
+        elif key in _OUT_KEYS and cnd == 3:       # MoE (E, F, D)
+            spec = (ep, "model", None) if ep else (None, "model", fsdp)
+        elif cnd == 1:
+            spec = (None,)
+        else:
+            spec = (None,) * cnd
+
+        if stacked:
+            spec = (None,) + tuple(spec)
+        # optimizer scalars / odd ranks: pad or trim to leaf rank
+        spec = tuple(spec)[:nd] + (None,) * max(0, nd - len(spec))
+        return _guard(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_state_pspecs(opt_shape: Pytree, param_specs_tree: Pytree) -> Pytree:
+    """Optimizer moments (m / v / mu) inherit the parameter sharding; step
+    counters replicate."""
+    return {k: (P() if k == "step" else param_specs_tree) for k in opt_shape}
+
+
+def named(mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh) -> P:
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return P(axes)
+
+
+def cache_pspecs(cfg, cache_shape: Pytree, mesh, *, shard_batch: bool) -> Pytree:
+    """Decode cache sharding.
+
+    Batched decode: batch over the data axes, KV-cache *sequence* over the
+    `model` axis (context-parallel decode — attention contracts over S, so
+    per-layer collectives are only the tiny (B, Hq, hd) partial-sum
+    all-reduce; sharding kv-heads instead would not divide GQA head counts
+    like kv=8 over a 16-way axis and would replicate hundreds of GB).
+
+    long_500k (batch=1): the sequence dim shards over *all* mesh axes
+    (data+model context parallelism); recurrent states (mamba/rwkv) shard
+    their channel dim over every axis instead — they are O(1) in S.
+    """
+    daxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    all_axes = daxes + ("model",)
+
+    def rule(path, leaf):
+        key = _leaf_key(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if key == "pos":
+            return P()
+        stacked = any(isinstance(e, jax.tree_util.DictKey) and e.key == "layers"
+                      for e in path)
+        b_ax = daxes if shard_batch else None
+        if key in ("k", "v"):                       # (B, S, Hkv, hd)
+            s_ax = "model" if shard_batch else all_axes
+            spec = (b_ax, s_ax, None, None)
+        elif key in ("kc", "vc"):                   # (B, 1500, Hkv, hd) — S not /16
+            spec = (b_ax, None, None, None)
+        elif key == "conv":                         # (B, d_conv-1, d_inner)
+            spec = (b_ax, None, "model" if shard_batch else all_axes)
+        elif key == "ssm":                          # (B, d_inner, N)
+            spec = (b_ax, "model" if shard_batch else all_axes, None)
+        elif key == "wkv":                          # (B, H, hd, hd)
+            spec = (b_ax, "model", None, None)
+        elif key in ("tm_x", "cm_x"):               # (B, D)
+            spec = (b_ax, "model" if shard_batch else all_axes)
+        else:
+            spec = (None,) * nd
+        if stacked:
+            spec = (None,) + tuple(spec)
+        spec = tuple(spec)[:nd] + (None,) * max(0, nd - len(spec))
+        return _guard(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × input shape) — the
+dry-run lowers against these; nothing is ever allocated.
+
+Frontend carve-out (DESIGN.md): audio/vlm archs receive precomputed frame /
+patch embeddings of the right shape instead of raw media.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import SHAPES, InputShape
+from repro.models.decode import init_cache
+from repro.models.transformer import ArchConfig
+
+Pytree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict = {"labels": _sds((B, S), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.encoder is not None:
+        batch["enc_embeds"] = _sds((B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def batch_pspecs(cfg: ArchConfig, batch: dict, mesh) -> dict:
+    daxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    B = jax.tree.leaves(batch)[0].shape[0]
+    size = 1
+    for n in daxes:
+        size *= mesh.shape[n]
+    b_ax = daxes if B % size == 0 else None   # batch=1 long-context: replicate
+
+    out = {}
+    for k, v in batch.items():
+        if v.ndim == 2:
+            out[k] = P(b_ax, None)
+        else:
+            out[k] = P(b_ax, None, None)
+    return out
+
+
+def decode_inputs(cfg: ArchConfig, shape: InputShape) -> tuple[dict, Pytree]:
+    """(token batch, abstract cache) for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    token = _sds((B, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {"token": token}, cache
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """All abstract inputs for the given shape (train batch or decode set)."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train" or shape.kind == "prefill":
+        return {"batch": train_batch_specs(cfg, shape)}
+    token, cache = decode_inputs(cfg, shape)
+    return {"token": token["token"], "cache": cache}

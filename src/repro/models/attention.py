@@ -1,0 +1,177 @@
+"""GQA attention: full (oracle), chunked online-softmax (train/prefill at long
+seq — the XLA analogue of flash attention; the Pallas version lives in
+repro.kernels.flash_attention), and single-token decode against a KV cache.
+
+Shapes:  q (B, S, Hq, hd), k/v (B, S, Hkv, hd), Hq = G * Hkv.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int,
+               dtype=jnp.float32) -> jax.Array:
+    """(…, Sq, Sk) additive bias. window > 0 = sliding window (causal)."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok = ok & (d >= 0)
+    if window > 0:
+        ok = ok & (d < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def attend_full(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+                window: int = 0, q_pos: jax.Array | None = None,
+                k_pos: jax.Array | None = None) -> jax.Array:
+    """Reference attention (materialises Sq×Sk scores)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if k_pos is None:
+        k_pos = jnp.arange(k.shape[1])
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: int = 0,
+                   q_chunk: int = 512, k_chunk: int = 512,
+                   skip_masked_chunks: bool = False) -> jax.Array:
+    """Online-softmax attention, O(chunk²) live memory.
+
+    Outer ``lax.scan`` over query blocks; inner loop over key blocks with
+    running (max, sum, acc).  ``skip_masked_chunks`` (§Perf) removes the
+    compute for fully-masked blocks of sliding-window layers with a
+    **statically unrolled banded loop**: each q block visits only the
+    ``(window+chunk-1)//chunk + 1`` kv blocks intersecting its band, indexed
+    by Python constants.  Dynamic indexing (lax.cond / clipped gathers /
+    dynamic fori bounds) was tried first and REFUTED — GSPMD reshards the
+    attention einsums when block indices are traced values, blowing
+    collectives up ~10× (EXPERIMENTS.md §Perf, iterations 2a/2b).  Pure
+    causal layers keep the masked scan (their waste is only ~2×; the Pallas
+    kernel skips them properly on TPU via pl.when).
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0, (Sq, q_chunk, Sk, k_chunk)
+
+    qg = q.reshape(B, nq, q_chunk, Hkv, G, hd)
+    kg = k.reshape(B, nk, k_chunk, Hkv, hd)
+    vg = v.reshape(B, nk, k_chunk, Hkv, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    def compute(state, qb, q_pos, ki):
+        m, s, acc = state
+        k_pos = ki * k_chunk + jnp.arange(k_chunk)
+        kb = kg[:, ki].astype(jnp.float32)
+        vb = vg[:, ki].astype(jnp.float32)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb)
+        sc = sc + _mask_bias(q_pos, k_pos, causal, window)
+        new_m = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - new_m[..., None])
+        corr = jnp.exp(m - new_m)
+        s2 = s * corr + jnp.sum(p, axis=-1)
+        acc2 = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+        return new_m, s2, acc2
+
+    def init_state():
+        return (jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, q_chunk), jnp.float32),
+                jnp.zeros((B, Hkv, G, q_chunk, hd), jnp.float32))
+
+    if skip_masked_chunks and window > 0:
+        # Longformer/T5-local formulation: vectorise over ALL q blocks at
+        # once and unroll a short static loop over the `band` block offsets,
+        # pairing q block i with the statically-shifted k block i+off.  No
+        # inner scan, no dynamic indexing — GSPMD sees `band` einsums with
+        # the same contraction structure as full attention (resharding
+        # happens once, not per block; see §Perf iterations 2a–2c).
+        band = min(nk, (window + k_chunk - 1) // k_chunk + 1)
+
+        def shifted(x, off):
+            # shifted(x, off)[:, i] == x[:, i + off] (zero-padded)
+            if off == 0:
+                return x
+            sh = -off
+            pad = jnp.zeros_like(x[:, :sh])
+            return jnp.concatenate([pad, x[:, :nk - sh]], axis=1)
+
+        qa = qg.astype(jnp.float32) * scale                   # (B,nq,qc,Hkv,G,hd)
+        q_pos = (jnp.arange(nq) * q_chunk)[:, None] + jnp.arange(q_chunk)
+        m = jnp.full((B, nq, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        s = jnp.zeros((B, nq, Hkv, G, q_chunk), jnp.float32)
+        acc = jnp.zeros((B, nq, Hkv, G, q_chunk, hd), jnp.float32)
+        for off in range(-(band - 1), 1):
+            kb = shifted(kg, off).astype(jnp.float32)         # (B,nq,kc,Hkv,hd)
+            vb = shifted(vg, off).astype(jnp.float32)
+            k_pos = (jnp.arange(nq) + off)[:, None] * k_chunk + jnp.arange(k_chunk)
+            sc = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qa, kb)
+            d = q_pos[:, :, None] - k_pos[:, None, :]         # (nq, qc, kc)
+            ok = (d >= 0) if causal else jnp.ones_like(d, bool)
+            ok = ok & (d < window)
+            ok = ok & (k_pos[:, None, :] >= 0)   # zero-pad blocks are not keys
+            sc = sc + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]
+            new_m = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - new_m[..., None])
+            corr = jnp.exp(m - new_m)
+            s = s * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bnhgqk,bnkhd->bnhgqd", p, vb)
+            m = new_m
+        out = acc / jnp.maximum(s, 1e-30)[..., None]          # (B,nq,Hkv,G,qc,hd)
+        out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sq, Hq, hd)
+        return out.astype(q.dtype)
+
+    def q_block(carry, qi):
+        qb = qg[:, qi].astype(jnp.float32) * scale          # (B, qc, Hkv, G, hd)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(state, ki):
+            return compute(state, qb, q_pos, ki), None
+
+        (m, s, acc), _ = jax.lax.scan(kv_step, init_state(), jnp.arange(nk))
+        out = acc / jnp.maximum(s, 1e-30)[..., None]         # (B,Hkv,G,qc,hd)
+        return carry, out.transpose(0, 3, 1, 2, 4)           # (B,qc,Hkv,G,hd)
+
+    _, blocks = jax.lax.scan(q_block, (), jnp.arange(nq))    # (nq,B,qc,Hkv,G,hd)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def attend_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """One-token decode. q (B, 1, Hq, hd); caches (B, S, Hkv, hd); ``pos`` is
+    the index of the current token (cache slots > pos are invalid).
+
+    For sliding-window layers the cache is a ring buffer of size ``window``;
+    validity is by slot-age rather than absolute position.
+    """
+    B, _, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    slots = jnp.arange(S)
+    if window > 0:
+        valid = slots < jnp.minimum(pos + 1, S)   # ring buffer, all slots live once warm
+    else:
+        valid = slots <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, hd).astype(q.dtype)

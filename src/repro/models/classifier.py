@@ -1,0 +1,63 @@
+"""Small classifier used for the paper's FL experiments (CIFAR-scale stand-in).
+
+Explicitly split into a *representation layer* and a *decision layer*
+(paper §III-B): ``embed`` returns the penultimate representation — exactly the
+vector PAA prototypes are built from; ``apply`` adds the decision head.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int = 64
+    hidden: tuple[int, ...] = (128, 128)
+    rep_dim: int = 64         # representation (prototype) dimension
+    num_classes: int = 10
+
+
+def init_mlp(cfg: MLPConfig, key: jax.Array) -> Pytree:
+    dims = (cfg.in_dim, *cfg.hidden, cfg.rep_dim)
+    params = {}
+    keys = jax.random.split(key, len(dims))
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(keys[i], (a, b), jnp.float32) * (2.0 / a) ** 0.5
+        params[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+    params["w_head"] = jax.random.normal(keys[-1], (cfg.rep_dim, cfg.num_classes),
+                                         jnp.float32) * (1.0 / cfg.rep_dim) ** 0.5
+    params["b_head"] = jnp.zeros((cfg.num_classes,), jnp.float32)
+    return params
+
+
+def embed(cfg: MLPConfig, params: Pytree, x: jax.Array) -> jax.Array:
+    """Representation layer: (B, in_dim) -> (B, rep_dim)."""
+    h = x
+    n_hidden = len(cfg.hidden) + 1
+    for i in range(n_hidden):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_hidden - 1:
+            h = jax.nn.relu(h)
+    return jnp.tanh(h)   # bounded reps keep Pearson well-conditioned
+
+
+def apply(cfg: MLPConfig, params: Pytree, x: jax.Array) -> jax.Array:
+    """Full model: (B, in_dim) -> (B, num_classes) logits."""
+    return embed(cfg, params, x) @ params["w_head"] + params["b_head"]
+
+
+def init_stacked(cfg: MLPConfig, key: jax.Array, n_clients: int,
+                 same_init: bool = True) -> Pytree:
+    """Stacked client params.  FL convention: all clients start from the same
+    initialisation (``same_init=True``, as in FedAvg)."""
+    if same_init:
+        p = init_mlp(cfg, key)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape).copy(), p)
+    keys = jax.random.split(key, n_clients)
+    return jax.vmap(lambda k: init_mlp(cfg, k))(keys)

@@ -1,0 +1,204 @@
+"""KV-cache / recurrent-state decode path (serve_step).
+
+The cache mirrors the pattern-period layout of the parameters: one entry per
+pattern position with leaves stacked over ``n_periods``, so decode is the same
+``lax.scan`` as training and HLO stays O(pattern).  Cache kinds per mixer:
+
+  attn  : k/v ring buffers — full layers allocate ``seq_len`` slots, sliding-
+          window layers allocate only ``window`` slots (this is what makes
+          long_500k feasible for SWA/hybrid archs);
+  mamba : (conv_state, ssm_state) — O(1) in sequence length;
+  rwkv  : (tm_x, cm_x, wkv) — O(1) in sequence length;
+  cross : precomputed encoder K/V (whisper), written once at cache init.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import rwkv as rk
+from repro.models.layers import apply_rope, norm, rms_norm
+from repro.models.moe import moe_apply, moe_capacity
+from repro.models.layers import ffn_apply
+from repro.models.transformer import ArchConfig, LayerSpec, encode, unembed
+
+Pytree = Any
+
+
+def _layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, seq_len: int,
+                 lead: tuple[int, ...], enc_frames: int = 0) -> dict:
+    dt = cfg.dtype
+    if spec.mixer == "attn":
+        s_c = min(spec.window, seq_len) if spec.window > 0 else seq_len
+        c = {"k": jnp.zeros(lead + (batch, s_c, cfg.n_kv_heads, cfg.head_dim), dt),
+             "v": jnp.zeros(lead + (batch, s_c, cfg.n_kv_heads, cfg.head_dim), dt)}
+        if spec.cross_attn:
+            c["kc"] = jnp.zeros(lead + (batch, enc_frames, cfg.n_kv_heads, cfg.head_dim), dt)
+            c["vc"] = jnp.zeros(lead + (batch, enc_frames, cfg.n_kv_heads, cfg.head_dim), dt)
+        return c
+    if spec.mixer == "mamba":
+        return {"conv": jnp.zeros(lead + (batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner), dt),
+                "ssm": jnp.zeros(lead + (batch, cfg.mamba_d_inner, cfg.mamba_d_state),
+                                 jnp.float32)}
+    if spec.mixer == "rwkv":
+        return {"tm_x": jnp.zeros(lead + (batch, cfg.d_model), dt),
+                "cm_x": jnp.zeros(lead + (batch, cfg.d_model), dt),
+                "wkv": jnp.zeros(lead + (batch, cfg.rwkv_heads, cfg.rwkv_head_dim,
+                                         cfg.rwkv_head_dim), jnp.float32)}
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Pytree:
+    """Abstract-friendly zero cache (use inside jit / eval_shape)."""
+    enc_frames = cfg.encoder.n_frames if cfg.encoder is not None else 0
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.n_periods > 0:
+        cache["layers"] = [
+            _layer_cache(cfg, spec, batch, seq_len, (cfg.n_periods,), enc_frames)
+            for spec in cfg.pattern]
+    cache["rem"] = [
+        _layer_cache(cfg, spec, batch, seq_len, (), enc_frames)
+        for spec in cfg.remainder]
+    return cache
+
+
+def warm_cache(cfg: ArchConfig, params: Pytree, cache: Pytree,
+               enc_embeds: jax.Array | None = None, pos: jax.Array | int = 0
+               ) -> Pytree:
+    """Fill cross-attention K/V from the encoder output and set the decode
+    position (e.g. after an external prefill)."""
+    cache = dict(cache)
+    cache["pos"] = jnp.asarray(pos, jnp.int32)
+    if cfg.encoder is not None and enc_embeds is not None:
+        enc_out = encode(cfg, params, enc_embeds)
+        B, Se = enc_out.shape[:2]
+
+        def fill(layer_params, entry, lead_idx=None):
+            kc = (enc_out @ layer_params["kc"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+            vc = (enc_out @ layer_params["vc"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+            entry = dict(entry)
+            entry["kc"], entry["vc"] = kc, vc
+            return entry
+
+        if cfg.n_periods > 0:
+            for i, spec in enumerate(cfg.pattern):
+                if spec.cross_attn:
+                    lp = cache["layers"][i]
+                    per = [fill(jax.tree.map(lambda x, j=j: x[j], params["layers"][i]),
+                                jax.tree.map(lambda x, j=j: x[j], lp))
+                           for j in range(cfg.n_periods)]
+                    cache["layers"][i] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        for i, spec in enumerate(cfg.remainder):
+            if spec.cross_attn:
+                cache["rem"][i] = fill(params["rem_layers"][i], cache["rem"][i])
+    return cache
+
+
+# --------------------------------------------------------------------------- #
+# Single-token layer application
+# --------------------------------------------------------------------------- #
+
+def _attn_decode(cfg: ArchConfig, spec: LayerSpec, p: dict, c: dict,
+                 h: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict]:
+    B = h.shape[0]
+    x = norm(cfg.norm, h, p["norm1"])
+    q = (x @ p["q"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["k"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["v"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"]["scale"])
+        k = rms_norm(k, p["k_norm"]["scale"])
+    if spec.rope:
+        pid = jnp.broadcast_to(pos[None, None], (B, 1))
+        q = apply_rope(q, pid, cfg.rope_theta)
+        k = apply_rope(k, pid, cfg.rope_theta)
+
+    s_c = c["k"].shape[1]
+    slot = pos % s_c if spec.window > 0 else pos
+    k_cache = jax.lax.dynamic_update_slice(c["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(c["v"], v, (0, slot, 0, 0))
+    out = attn.attend_decode(q, k_cache, v_cache, pos, window=spec.window)
+    h = h + out.reshape(B, 1, -1) @ p["o"]
+    c = dict(c, k=k_cache, v=v_cache)
+
+    if spec.cross_attn and "kc" in c:
+        xc = norm(cfg.norm, h, p["norm_c"])
+        qc = (xc @ p["qc"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        Se = c["kc"].shape[1]
+        co = attn.attend_decode(qc, c["kc"], c["vc"], jnp.asarray(Se - 1, jnp.int32))
+        h = h + co.reshape(B, 1, -1) @ p["oc"]
+    return h, c
+
+
+def _ffn_decode(cfg: ArchConfig, spec: LayerSpec, p: dict, h: jax.Array) -> jax.Array:
+    x = norm(cfg.norm, h, p["norm2"])
+    if spec.moe:
+        T = x.shape[0] * x.shape[1]
+        cap = moe_capacity(T, cfg.moe_top_k, cfg.n_experts, cfg.capacity_factor)
+        ep = "data" if cfg.sharding_mode == "ep_tp" else None
+        y, _ = moe_apply(cfg.activation, p["moe"], x, top_k=cfg.moe_top_k,
+                         capacity=cap, ep_axis=ep)
+        return h + y
+    return h + ffn_apply(cfg.activation, p["ffn"], x)
+
+
+def _apply_layer_decode(cfg: ArchConfig, spec: LayerSpec, p: dict, c: dict,
+                        h: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict]:
+    if spec.mixer == "attn":
+        h, c = _attn_decode(cfg, spec, p, c, h, pos)
+        return _ffn_decode(cfg, spec, p, h), c
+    if spec.mixer == "mamba":
+        x = norm(cfg.norm, h, p["norm1"])
+        y, st = mb.mamba_decode(p["mamba"], x, {"conv": c["conv"], "ssm": c["ssm"]},
+                                d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv,
+                                dt_rank=cfg.mamba_dt_rank)
+        h = h + y
+        return _ffn_decode(cfg, spec, p, h), dict(c, **st)
+    if spec.mixer == "rwkv":
+        x = norm(cfg.norm, h, p["norm1"])
+        y, tm_x, wkv = rk.time_mix_apply(
+            p["time_mix"], x, c["tm_x"], c["wkv"],
+            n_heads=cfg.rwkv_heads, head_dim=cfg.rwkv_head_dim)
+        h = h + y
+        x = norm(cfg.norm, h, p["norm2"])
+        y, cm_x = rk.channel_mix_apply(p["channel_mix"], x, c["cm_x"])
+        return h + y, dict(c, tm_x=tm_x, cm_x=cm_x, wkv=wkv)
+    raise ValueError(spec.mixer)
+
+
+def decode_step(cfg: ArchConfig, params: Pytree, cache: Pytree,
+                token: jax.Array) -> tuple[jax.Array, Pytree]:
+    """One decode step. token (B, 1) int32 -> (logits (B, 1, V), new cache)."""
+    pos = cache["pos"]
+    h = params["embed"].astype(cfg.dtype)[token]
+    h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if cfg.abs_pos:
+        from repro.models.layers import sinusoidal_at
+        h = h + sinusoidal_at(pos[None, None], cfg.d_model).astype(h.dtype)
+
+    new_cache: dict = {"pos": pos + 1, "rem": []}
+    if cfg.n_periods > 0:
+        def body(h, xs):
+            period_params, period_cache = xs
+            new_pc = []
+            for i, spec in enumerate(cfg.pattern):
+                h, ci = _apply_layer_decode(cfg, spec, period_params[i],
+                                            period_cache[i], h, pos)
+                new_pc.append(ci)
+            return h, new_pc
+
+        h, stacked_cache = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+        new_cache["layers"] = stacked_cache
+    for i, spec in enumerate(cfg.remainder):
+        h, ci = _apply_layer_decode(cfg, spec, params["rem_layers"][i],
+                                    cache["rem"][i], h, pos)
+        new_cache["rem"].append(ci)
+
+    h = norm(cfg.norm, h, params["final_norm"])
+    logits = unembed(cfg, params, h)
+    return logits, new_cache

@@ -1,0 +1,74 @@
+"""Train / serve step builders — the units the launcher jits and shards."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.decode import decode_step, init_cache  # noqa: F401 (re-export)
+from repro.models.transformer import ArchConfig, forward
+from repro.optim import Optimizer
+
+Pytree = Any
+AUX_WEIGHT = 0.01  # MoE load-balance coefficient
+
+
+def lm_loss(cfg: ArchConfig, params: Pytree, batch: dict) -> jax.Array:
+    """Next-token cross-entropy (+ MoE aux).  ``batch`` carries ``labels`` and
+    one of ``tokens`` / ``embeds`` (+ ``enc_embeds`` for enc-dec archs)."""
+    logits, _, aux = forward(
+        cfg, params,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        enc_embeds=batch.get("enc_embeds"),
+    )
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + AUX_WEIGHT * aux
+
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer
+                    ) -> Callable[[Pytree, Pytree, dict], tuple[jax.Array, Pytree, Pytree]]:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, batch))(params)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return loss, params, opt_state
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig):
+    def eval_step(params, batch):
+        return lm_loss(cfg, params, batch)
+
+    return eval_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """serve_step(params, cache, token (B,1)) -> (logits (B,1,V), cache')."""
+
+    def serve_step(params, cache, token):
+        return decode_step(cfg, params, cache, token)
+
+    return serve_step
+
+
+def greedy_generate(cfg: ArchConfig, params: Pytree, prompt: jax.Array,
+                    max_new: int, seq_len: int) -> jax.Array:
+    """Host-loop greedy decoding used by the serving example (prompt (B, P))."""
+    B, P = prompt.shape
+    cache = init_cache(cfg, B, seq_len)
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    tok = prompt[:, :1]
+    out = [tok]
+    logits = None
+    for i in range(P + max_new - 1):
+        logits, cache = step(params, cache, tok)
+        if i + 1 < P:
+            tok = prompt[:, i + 1:i + 2]
+        else:
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(prompt.dtype)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,109 @@
+"""Mamba (selective SSM) mixer for the Jamba hybrid architecture.
+
+Faithful Mamba-1 block: in_proj → (x, z); causal depthwise conv; selective
+(input-dependent) Δ, B, C; diagonal state-space scan; gated output.
+
+The scan is ``lax.scan`` over time with state (B, d_inner, d_state) — the
+recurrence is elementwise over d_inner, so sharding d_inner over the `model`
+mesh axis makes the scan embarrassingly parallel across devices (no per-step
+collectives).  Decode is the single-step recurrence against carried
+(conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def mamba_init(key: jax.Array, d_model: int, d_inner: int, d_state: int,
+               d_conv: int, dt_rank: int, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32)
+                   * (1.0 / d_conv) ** 0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+            (d_inner, d_state)).copy()),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+    return p
+
+
+def _selective_terms(p: dict, xc: jax.Array, d_state: int, dt_rank: int):
+    """xc (B, S, d_inner) -> dt (B,S,d_inner), Bmat/Cmat (B,S,d_state)."""
+    proj = xc @ p["x_proj"]
+    dt_in, Bm, Cm = jnp.split(proj.astype(jnp.float32),
+                              [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    return dt, Bm, Cm
+
+
+def mamba_apply(p: dict, x: jax.Array, *, d_state: int, d_conv: int,
+                dt_rank: int) -> jax.Array:
+    """Train/prefill path. x (B, S, D) -> (B, S, D)."""
+    B, S, _ = x.shape
+    xz = x @ p["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)                          # (B, S, d_inner)
+    d_inner = xr.shape[-1]
+
+    # causal depthwise conv over time
+    pad = jnp.pad(xr, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    xc = sum(pad[:, i:i + S, :] * p["conv_w"][i][None, None, :]
+             for i in range(d_conv)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm = _selective_terms(p, xc, d_state, dt_rank)
+    A = -jnp.exp(p["A_log"])                                   # (d_inner, N)
+    dA = jnp.exp(dt[..., None] * A[None, None])                # (B,S,d_inner,N)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+
+    def step(h, inputs):
+        dA_t, dBx_t, C_t = inputs
+        h = h * dA_t + dBx_t                                   # (B, d_inner, N)
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + xc.astype(jnp.float32) * p["D"][None, None, :]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_init_state(batch: int, d_inner: int, d_state: int, d_conv: int,
+                     dtype) -> dict:
+    return {"conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+            "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32)}
+
+
+def mamba_decode(p: dict, x: jax.Array, state: dict, *, d_state: int,
+                 d_conv: int, dt_rank: int) -> tuple[jax.Array, dict]:
+    """Single-token step. x (B, 1, D) -> (B, 1, D), new state."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)                          # (B, d_inner)
+
+    conv_buf = jnp.concatenate([state["conv"], xr[:, None]], axis=1)  # (B,d_conv,di)
+    xc = jnp.einsum("bcd,cd->bd", conv_buf, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv = conv_buf[:, 1:]
+
+    dt, Bm, Cm = _selective_terms(p, xc[:, None], d_state, dt_rank)
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None])                      # (B, d_inner, N)
+    h = state["ssm"] * dA + (dt * xc.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + xc.astype(jnp.float32) * p["D"][None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "ssm": h}

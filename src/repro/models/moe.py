@@ -1,0 +1,128 @@
+"""Mixture-of-Experts with capacity-based scatter dispatch (GShard/Switch
+lineage, adapted for TPU + GSPMD):
+
+  * router: softmax top-k over E experts,
+  * each token gets a slot in its expert's capacity-C buffer via a cumsum
+    position (overflow tokens are *dropped* — their expert contribution is
+    zero; the residual path keeps them sane),
+  * dispatch is a scatter (memory op, not FLOPs) into an (E·C, D) buffer, so
+    ``cost_analysis`` reports the *active* expert FLOPs E·C·D·F ≈ tokens·top_k
+    ·cf·D·F — not the dense all-experts FLOPs a one-hot einsum would fake,
+  * expert compute is a batched einsum (E, C, D) × (E, D, F), which shards
+    F over the `model` mesh axis (tensor-parallel experts) and C over `data`
+    (capacity-sharded slots).
+
+``capacity`` must be chosen divisible by the data-axis size by the caller
+(see ArchConfig.moe_capacity) so slot sharding is even.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, dense_init, is_gated
+
+
+def moe_init(key: jax.Array, act: str, d_model: int, d_ff: int, n_experts: int,
+             dtype, shared_expert: bool = False) -> dict:
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(keys[0], d_model, n_experts, jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(keys[1], n_experts)),
+        "w_down": jax.vmap(lambda k: dense_init(k, d_ff, d_model, dtype))(
+            jax.random.split(keys[3], n_experts)),
+    }
+    if is_gated(act):
+        p["w_up"] = jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(keys[2], n_experts))
+    if shared_expert:
+        from repro.models.layers import ffn_init
+        p["shared"] = ffn_init(keys[4], act, d_model, d_ff, dtype)
+    return p
+
+
+def router_topk(logits: jax.Array, top_k: int) -> tuple[jax.Array, jax.Array]:
+    """(T, E) -> gates (T, k) renormalised, idx (T, k)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def load_balance_loss(logits: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style aux loss: E · <fraction routed to e> · <mean router prob e>."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    onehot = jax.nn.one_hot(idx[:, 0], n_experts, dtype=jnp.float32)
+    ce = jnp.mean(onehot, axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def moe_apply(act: str, p: dict, x: jax.Array, *, top_k: int,
+              capacity: int, ep_axis: str | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """x (..., D) -> (y (..., D), aux_loss scalar).
+
+    ``ep_axis``: mesh axis name for expert parallelism — the dispatch buffer
+    is explicitly constrained to shard its expert dim over this axis, so the
+    token scatter lowers to an all-to-all instead of GSPMD replicating the
+    whole (E·C, D) buffer (measured 100× collective blow-up without the
+    constraint — EXPERIMENTS.md §Perf).  Requires an active mesh (set_mesh).
+    """
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xt = x.reshape(-1, D)
+    T = xt.shape[0]
+    E = p["router"].shape[1]
+    C = capacity
+
+    logits = xt.astype(jnp.float32) @ p["router"]                  # (T, E)
+    gates, idx = router_topk(logits, top_k)                        # (T, k)
+    aux = load_balance_loss(logits, idx, E)
+
+    # position of each (token, choice) within its expert's buffer
+    flat_e = idx.reshape(-1)                                       # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (T*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)               # exclusive cumsum
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)                # E*C = drop sentinel
+
+    # scatter tokens to slots (memory movement, not FLOPs)
+    xk = jnp.repeat(xt, top_k, axis=0)                             # (T*k, D)
+    buf = jnp.zeros((E * C, D), x.dtype).at[slot].set(
+        xk, mode="drop", unique_indices=True)
+    buf = buf.reshape(E, C, D)
+    if ep_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        buf = jax.lax.with_sharding_constraint(buf, P(ep_axis, None, None))
+
+    # expert FFN (tensor-parallel over F, capacity-sharded over C)
+    gate_h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    up_h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"]) if is_gated(act) else None
+    h = activation(act, gate_h, up_h)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if ep_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        out = jax.lax.with_sharding_constraint(out, P(ep_axis, None, None))
+    out = out.reshape(E * C, D)
+
+    # gather back + weighted combine
+    padded = jnp.concatenate([out, jnp.zeros((1, D), out.dtype)], axis=0)
+    yk = padded[slot]                                              # (T*k, D)
+    w = (gates.reshape(-1) * keep.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.sum((yk * w[:, None]).reshape(T, top_k, D), axis=1)
+
+    if "shared" in p:
+        from repro.models.layers import ffn_apply
+        y = y + ffn_apply(act, p["shared"], xt)
+    return y.reshape(orig_shape), aux
+
+
+def moe_capacity(tokens: int, top_k: int, n_experts: int,
+                 capacity_factor: float = 1.25, multiple: int = 128) -> int:
+    """Slots per expert, rounded up to ``multiple`` (keeps the slot axis
+    divisible by the data-axis size and MXU-aligned)."""
+    raw = tokens * top_k * capacity_factor / n_experts
+    return max(multiple, int(-(-raw // multiple)) * multiple)

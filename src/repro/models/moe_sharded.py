@@ -1,0 +1,111 @@
+"""Explicit expert-parallel MoE via shard_map (the GShard schedule).
+
+Auto-SPMD cannot partition capacity dispatch: the scatter from token-sharded
+activations into an expert-sharded buffer makes GSPMD replicate the whole
+(E·C, D) buffer (measured: ~30 s of collectives per llama4 train step at
+16×16 — EXPERIMENTS.md §Perf).  This module takes manual control:
+
+  per shard: local router → local top-k → LOCAL capacity buffer (no comm)
+  all_to_all over the expert axis: (E, C_loc, D) → (E_loc, C, D)
+  local expert matmuls (weights resident: E over `ep` axis, F over `tp` axis)
+  psum over `tp` for the down-projection partial sums
+  all_to_all back + local weighted combine.
+
+Per-device comm per layer = 2 × T_loc·top_k·cf·D bytes of all-to-all +
+one psum — the token-movement lower bound, independent of expert-table size.
+
+Requires n_experts % ep_size == 0 (llama4 128/16 ✓, jamba 16/16 ✓;
+grok's 8 experts fall back to the dense-dispatch path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import activation, is_gated
+from repro.models.moe import load_balance_loss, router_topk
+
+
+def _local_dispatch(xt, gates, idx, E, C_loc, top_k):
+    """Token-sharded local scatter into (E, C_loc, D) — no communication."""
+    T_loc, D = xt.shape
+    flat_e = idx.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                              flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C_loc
+    slot = jnp.where(keep, flat_e * C_loc + pos, E * C_loc)
+    xk = jnp.repeat(xt, top_k, axis=0)
+    buf = jnp.zeros((E * C_loc, D), xt.dtype).at[slot].set(
+        xk, mode="drop", unique_indices=True)
+    return buf.reshape(E, C_loc, D), slot, keep
+
+
+def ambient_mesh_shape() -> dict:
+    """Axis sizes of the ambient (set_mesh) mesh; {} when none is active."""
+    am = jax.sharding.get_abstract_mesh()
+    return dict(am.shape) if am is not None else {}
+
+
+def moe_apply_shard_map(act: str, p: dict, x: jax.Array, *, top_k: int,
+                        capacity: int, ep_axis: str = "data",
+                        tp_axis: str = "model",
+                        batch_axes: tuple = ("data",)
+                        ) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (y, aux).  Weights: w_gate/w_up (E, D, F), w_down
+    (E, F, D) — sharded P(ep, None, tp) / P(ep, tp, None).  Uses the ambient
+    mesh (jax.set_mesh)."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    E = p["router"].shape[1]
+    assert is_gated(act), "shard_map EP path assumes a gated FFN"
+    ep = ambient_mesh_shape()[ep_axis]
+    assert E % ep == 0, (E, ep)
+    C_loc = max(8, capacity // ep)
+
+    def body(xt, router, w_gate, w_up, w_down):
+        # xt (T_loc, D) full-D token shard; weights local (E_loc, D, F_loc)
+        T_loc = xt.shape[0]
+        logits = xt.astype(jnp.float32) @ router                  # (T_loc, E)
+        gates, idx = router_topk(logits, top_k)
+        aux = jax.lax.pmean(load_balance_loss(logits, idx, E), ep_axis)
+
+        buf, slot, keep = _local_dispatch(xt, gates, idx, E, C_loc, top_k)
+        # (E, C_loc, D) -> (E_loc, C_loc*ep, D): THE expert all-to-all
+        buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
+                                 tiled=True)
+
+        gate_h = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        up_h = jnp.einsum("ecd,edf->ecf", buf, w_up) if w_up is not None else None
+        h = activation(act, gate_h, up_h)
+        out = jnp.einsum("ecf,efd->ecd", h, w_down)
+        out = jax.lax.psum(out, tp_axis)                          # F-partials
+
+        # back to token shards: (E_loc, C_loc*ep, D) -> (E, C_loc, D)
+        out = jax.lax.all_to_all(out, ep_axis, split_axis=1, concat_axis=0,
+                                 tiled=True)
+        padded = jnp.concatenate(
+            [out.reshape(E * C_loc, D), jnp.zeros((1, D), out.dtype)], axis=0)
+        yk = padded[slot]
+        w = (gates.reshape(-1) * keep.astype(jnp.float32)).astype(xt.dtype)
+        y = jnp.sum((yk * w[:, None]).reshape(T_loc, top_k, D), axis=1)
+        return y, aux
+
+    xt = x.reshape(-1, D)
+    tok_spec = P(batch_axes, None)
+    in_specs = (tok_spec, P(None, None), P(ep_axis, None, tp_axis),
+                P(ep_axis, None, tp_axis), P(ep_axis, tp_axis, None))
+    out_specs = (tok_spec, P())
+
+    y, aux = jax.shard_map(
+        body, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(xt, p["router"],
+                         p["w_gate"], p["w_up"], p["w_down"])
+
+    if "shared" in p:
+        from repro.models.layers import ffn_apply
+        y = y + ffn_apply(act, p["shared"], xt)
+    return y.reshape(orig_shape), aux

@@ -1,0 +1,113 @@
+"""RWKV6 ("Finch") mixer: linear-attention recurrence with **data-dependent
+per-channel decay** (the architecture's headline feature, arXiv:2404.05892).
+
+Time-mix:   r,k,v,g from token-shifted projections; decay
+            w_t = exp(-exp(w0 + tanh(x̃ A_w) B_w)) ∈ (0,1) per channel;
+            per-head state S (hd_k × hd_v):
+                y_t = r_t · (S_{t-1} + (u ⊙ k_t) vᵀ_t)
+                S_t = diag(w_t) S_{t-1} + k_t vᵀ_t
+Channel-mix: token-shifted squared-ReLU MLP with sigmoid receptance gate
+            (this *is* the FFN for RWKV layers — d_ff = 3.5·d_model = 8960).
+
+Train path is a ``lax.scan`` over time (the chunked Pallas kernel is
+repro.kernels.rwkv6_scan); decode is the single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def rwkv_time_mix_init(key: jax.Array, d_model: int, n_heads: int, head_dim: int,
+                       lora_rank: int, dtype) -> dict:
+    ks = jax.random.split(key, 9)
+    D = d_model
+    return {
+        "mu": 0.5 * jnp.ones((5, D), jnp.float32),          # shift mix for r,k,v,g,w
+        "w_r": dense_init(ks[0], D, n_heads * head_dim, dtype),
+        "w_k": dense_init(ks[1], D, n_heads * head_dim, dtype),
+        "w_v": dense_init(ks[2], D, n_heads * head_dim, dtype),
+        "w_g": dense_init(ks[3], D, n_heads * head_dim, dtype),
+        "w0": jnp.full((n_heads * head_dim,), -6.0, jnp.float32),
+        "w_lora_a": dense_init(ks[4], D, lora_rank, jnp.float32),
+        "w_lora_b": dense_init(ks[5], lora_rank, n_heads * head_dim, jnp.float32),
+        "u": (jax.random.normal(ks[6], (n_heads, head_dim), jnp.float32) * 0.1),
+        "ln_scale": jnp.zeros((n_heads * head_dim,), dtype),
+        "w_o": dense_init(ks[7], n_heads * head_dim, D, dtype),
+    }
+
+
+def rwkv_channel_mix_init(key: jax.Array, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d_model), jnp.float32),     # shift mix for k, r
+        "w_in": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype),
+        "w_rec": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def _shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Token shift: prepend x_prev (B, D), drop last. x (B, S, D)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay in (0, 1): (B, S, D) -> (B, S, D) fp32."""
+    lo = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(p["w0"] + lo))
+
+
+def time_mix_apply(p: dict, x: jax.Array, x_prev: jax.Array, wkv_state: jax.Array,
+                   *, n_heads: int, head_dim: int
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B,S,D) -> (y, new_x_prev (B,D), new_wkv_state (B,H,hd,hd))."""
+    B, S, D = x.shape
+    xs = _shift(x, x_prev)
+    mix = lambda i: x + (xs - x) * p["mu"][i][None, None].astype(x.dtype)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+
+    H, hd = n_heads, head_dim
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = xg @ p["w_g"]
+    w = _decay(p, xw).reshape(B, S, H, hd)                    # (B,S,H,hd)
+
+    def step(state, t_in):
+        r_t, k_t, v_t, w_t = t_in                             # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,hdk,hdv)
+        y = jnp.einsum("bhk,bhkv->bhv",
+                       r_t, state + p["u"][None, :, :, None] * kv)
+        state = state * w_t[..., :, None] + kv
+        return state, y
+
+    seq = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    new_state, ys = jax.lax.scan(step, wkv_state, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, H * hd)        # (B,S,D')
+    y = rms_norm(y.astype(x.dtype), p["ln_scale"])
+    y = y * jax.nn.silu(g)
+    return y @ p["w_o"], x[:, -1], new_state
+
+
+def channel_mix_apply(p: dict, x: jax.Array, x_prev: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    xs = _shift(x, x_prev)
+    mix = lambda i: x + (xs - x) * p["mu"][i][None, None].astype(x.dtype)
+    xk, xr = mix(0), mix(1)
+    k = jax.nn.relu(xk @ p["w_in"])
+    kv = (k * k) @ p["w_out"]
+    r = jax.nn.sigmoid(xr @ p["w_rec"])
+    return r * kv, x[:, -1]
+
+
+def rwkv_init_state(batch: int, d_model: int, n_heads: int, head_dim: int,
+                    dtype=jnp.float32) -> dict:
+    return {
+        "tm_x": jnp.zeros((batch, d_model), dtype),
+        "cm_x": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+    }

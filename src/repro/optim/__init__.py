@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    momentum,
+    sgd,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_decay_schedule,
+    warmup_cosine_schedule,
+)

@@ -1,0 +1,112 @@
+"""Pure-JAX optimizers (optax is not available in the container).
+
+API mirrors the functional style: ``opt.init(params) -> state``,
+``opt.update(params, grads, state) -> (params, state)``.  States are pytrees,
+so they stack/shard exactly like parameters (the FL layer vmaps them over the
+client axis; the launcher shards them over the mesh — ZeRO-style, every state
+leaf inherits the parameter sharding).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        step = state["step"]
+        eta = sched(step)
+        new = jax.tree.map(lambda p, g: p - eta.astype(p.dtype) * g.astype(p.dtype),
+                           params, grads)
+        return new, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(params, grads, state):
+        step, mu = state["step"], state["mu"]
+        eta = sched(step)
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), mu, grads)
+        if nesterov:
+            d = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), mu, grads)
+        else:
+            d = mu
+        new = jax.tree.map(lambda p, di: p - (eta * di).astype(p.dtype), params, d)
+        return new, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay):
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        eta = sched(step - 1)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def leaf(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return p - (eta * upd).astype(p.dtype)
+
+        new = jax.tree.map(leaf, params, m, v)
+        return new, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay)

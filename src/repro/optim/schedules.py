@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay_schedule(lr: float, decay_steps: int, alpha: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * ((1 - alpha) * cos + alpha)
+
+    return sched
+
+
+def warmup_cosine_schedule(lr: float, warmup_steps: int, decay_steps: int,
+                           alpha: float = 0.0):
+    cos = cosine_decay_schedule(lr, max(decay_steps - warmup_steps, 1), alpha)
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return sched

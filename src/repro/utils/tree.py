@@ -1,0 +1,100 @@
+"""Pytree utilities shared across the framework.
+
+Most of the BFLN core operates on *stacked* pytrees: every leaf carries a
+leading ``n_clients`` axis so that all federated clients can be trained and
+aggregated with a single vmapped / collective program instead of a Python
+loop over clients (the TPU-native replacement for the paper's sequential
+client loop — see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_stack(trees: list[Pytree]) -> Pytree:
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: Pytree, n: int) -> list[Pytree]:
+    """Inverse of :func:`tree_stack`."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_index(tree: Pytree, i) -> Pytree:
+    """Select index ``i`` along the leading (client) axis of every leaf."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_dot(a: Pytree, b: Pytree) -> jax.Array:
+    """Global inner product of two pytrees."""
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves))
+
+
+def tree_sq_norm(tree: Pytree) -> jax.Array:
+    return tree_dot(tree, tree)
+
+
+def tree_size(tree: Pytree) -> int:
+    """Total number of scalar parameters in the tree."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_flatten_vector(tree: Pytree, dtype=jnp.float32) -> jax.Array:
+    """Flatten a pytree into a single 1-D vector (used for hashing / clustering
+    diagnostics, not for the hot aggregation path)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([jnp.ravel(x).astype(dtype) for x in leaves])
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_map_stacked(fn: Callable, tree: Pytree) -> Pytree:
+    """vmap ``fn`` over the leading client axis of ``tree``."""
+    return jax.vmap(fn)(tree)
+
+
+def tree_any_nan(tree: Pytree) -> jax.Array:
+    flags = [jnp.any(jnp.isnan(x)) for x in jax.tree.leaves(tree)]
+    return functools.reduce(jnp.logical_or, flags, jnp.asarray(False))
+
+
+def tree_weighted_mean(tree: Pytree, weights: jax.Array) -> Pytree:
+    """Weighted mean over the leading client axis. ``weights`` shape (n,)."""
+    wsum = jnp.sum(weights)
+
+    def leaf(x):
+        w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(x * w, axis=0) / wsum.astype(x.dtype)
+
+    return jax.tree.map(leaf, tree)

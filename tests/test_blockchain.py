@@ -1,0 +1,62 @@
+"""Blockchain: hash links, merkle roots, consensus verification, ledger."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.blockchain import Block, Blockchain, TokenLedger, Transaction, TxPool, hash_params
+
+
+def test_hash_params_deterministic_and_sensitive():
+    p = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,))}}
+    h1, h2 = hash_params(p), hash_params(p)
+    assert h1 == h2
+    p2 = {"a": jnp.arange(6.0).reshape(2, 3).at[0, 0].set(1e-7),
+          "b": {"c": jnp.ones((4,))}}
+    assert hash_params(p2) != h1
+    # structure-sensitive too
+    p3 = {"a": jnp.arange(6.0).reshape(3, 2), "b": {"c": jnp.ones((4,))}}
+    assert hash_params(p3) != h1
+
+
+def test_chain_links_and_validation():
+    chain = Blockchain()
+    pool = TxPool()
+    for r in range(3):
+        pool.submit(Transaction("model_hash", r, f"h{r}", r))
+        chain.pack_block(r, producer=r % 2, pool=pool)
+    assert chain.validate()
+    assert len(chain.blocks) == 4  # genesis + 3
+    # tampering with a block breaks the chain
+    b = chain.blocks[2]
+    chain.blocks[2] = Block(b.index, b.round_idx, 9, b.prev_hash,
+                            b.merkle_root, b.transactions)
+    assert not chain.validate()
+
+
+def test_verify_round_accepts_matching_rejects_tampered():
+    chain = Blockchain()
+    pool = TxPool()
+    hashes = [f"hash_{i}" for i in range(4)]
+    for i, h in enumerate(hashes):
+        pool.submit(Transaction("model_hash", i, h, 0))
+    # producer only aggregated clients 0,1,3 (client 2 freerode)
+    pool.submit(Transaction("agg_hash", 0, json.dumps([hashes[0], hashes[1],
+                                                       hashes[3]]), 0))
+    block = chain.pack_block(0, 0, pool)
+    ok = chain.verify_round(block, 4)
+    np.testing.assert_array_equal(ok, [True, True, False, True])
+
+
+def test_ledger_conservation_with_burn():
+    ledger = TokenLedger(4, initial_stake=5.0)
+    assert ledger.conserved()
+    ledger.mint_reward_pool(20.0)
+    rewards = np.asarray([6.0, 6.0, 6.0, 2.0])
+    verified = np.asarray([True, True, False, True])
+    ledger.settle_round(rewards, fee=0.5, producer=0, verified=verified)
+    assert ledger.conserved()
+    # unverified client's balance unchanged
+    np.testing.assert_allclose(ledger.balances[2], 5.0)
+    # supply = stakes + pool - burned
+    np.testing.assert_allclose(ledger.total_supply(), 4 * 5 + 20 - 6.0)

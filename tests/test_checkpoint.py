@@ -1,0 +1,31 @@
+"""Checkpoint round-trips (params + optimizer + chain metadata)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, restore_trainer_state, save_pytree, save_trainer_state
+
+
+def test_pytree_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((2,), jnp.bfloat16),
+                       "c": [jnp.asarray(1), jnp.asarray([True, False])]}}
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert str(np.asarray(x).dtype) == str(np.asarray(y).dtype)
+        np.testing.assert_array_equal(np.asarray(x, np.float64),
+                                      np.asarray(y, np.float64))
+
+
+def test_trainer_state_roundtrip(tmp_path):
+    params = {"w": jnp.ones((4, 4))}
+    opt_state = {"step": jnp.asarray(7), "m": {"w": jnp.zeros((4, 4))}}
+    path = str(tmp_path / "trainer.npz")
+    save_trainer_state(path, params, opt_state, round_idx=3,
+                       extra={"strategy": "bfln", "clusters": 5})
+    p, o, r, extra = restore_trainer_state(path)
+    assert r == 3
+    assert extra == {"strategy": "bfln", "clusters": 5}
+    np.testing.assert_array_equal(np.asarray(o["step"]), 7)

@@ -1,0 +1,36 @@
+"""CACC: centroid-representative selection (Eqs. 4–6) + packing queue."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consensus import packing_queue, producer_for_round, select_centroid_clients
+
+
+def test_centroid_selection_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    m, c = 12, 3
+    corr = rng.uniform(-1, 1, (m, m)).astype(np.float32)
+    corr = (corr + corr.T) / 2
+    np.fill_diagonal(corr, 1.0)
+    labels = rng.integers(0, c, m)
+
+    res = select_centroid_clients(jnp.asarray(corr), jnp.asarray(labels), c)
+    for tau in range(c):
+        members = np.flatnonzero(labels == tau)
+        centroid = corr[members].mean(axis=0)                 # Eq. 4
+        dists = np.linalg.norm(corr[members] - centroid, axis=1)  # Eqs. 5–6
+        want = members[np.argmin(dists)]
+        assert int(res.representatives[tau]) == int(want)
+
+
+def test_empty_cluster_marked():
+    corr = jnp.eye(4)
+    labels = jnp.asarray([0, 0, 1, 1])
+    res = select_centroid_clients(corr, labels, 3)
+    assert int(res.representatives[2]) == -1
+    q = packing_queue(res.representatives)
+    assert len(q) == 2 and -1 not in q
+
+
+def test_round_robin_rotation():
+    q = [4, 7, 1]
+    assert [producer_for_round(q, r) for r in range(6)] == [4, 7, 1, 4, 7, 1]

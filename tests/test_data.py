@@ -1,0 +1,74 @@
+"""Data pipeline: Dirichlet partitioner invariants + packing shapes."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import dirichlet_partition, make_classification_dataset, pack_clients
+from repro.data.lm import batch_stream, make_token_stream
+from repro.data.partition import sample_probe_batch
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(100, 2000),
+    k=st.integers(2, 10),
+    m=st.integers(2, 20),
+    beta=st.sampled_from([0.1, 0.3, 0.5, 10.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_partition_assigns_every_sample_exactly_once(n, k, m, beta, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, k, n)
+    parts = dirichlet_partition(labels, m, beta, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+    assert all(len(p) >= 2 for p in parts)
+
+
+def test_low_beta_is_more_skewed_than_high_beta():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 20000)
+
+    def mean_entropy(beta):
+        parts = dirichlet_partition(labels, 20, beta, seed=1)
+        ents = []
+        for p in parts:
+            counts = np.bincount(labels[p], minlength=10) + 1e-9
+            q = counts / counts.sum()
+            ents.append(-(q * np.log(q)).sum())
+        return np.mean(ents)
+
+    assert mean_entropy(0.1) < mean_entropy(0.5) < mean_entropy(50.0)
+
+
+def test_pack_clients_shapes_and_locality():
+    (x, y), _ = make_classification_dataset("synth10", seed=0)
+    parts = dirichlet_partition(y, 8, 0.1, seed=0)
+    cx, cy, tx, ty = pack_clients(x, y, parts, n_batches=3, batch_size=16)
+    assert cx.shape == (8, 3, 16, x.shape[1])
+    assert cy.shape == (8, 3, 16)
+    assert tx.shape[0] == 8 and ty.shape[0] == 8
+    # client train labels come from the client's own shard
+    for cid in range(8):
+        shard_labels = set(y[parts[cid]].tolist())
+        assert set(cy[cid].ravel().tolist()) <= shard_labels
+
+
+def test_probe_batch_single_category():
+    (x, y), _ = make_classification_dataset("synth10", seed=1)
+    probe = sample_probe_batch(x, y, category=4, psi=32, seed=0)
+    assert probe.shape == (32, x.shape[1])
+
+
+def test_token_stream_learnable_structure():
+    toks = make_token_stream(256, 5000, seed=0)
+    assert toks.min() >= 0 and toks.max() < 256
+    # successor entropy is far below uniform (the stream is learnable)
+    pairs = {}
+    for a, b in zip(toks[:-1], toks[1:]):
+        pairs.setdefault(int(a), set()).add(int(b))
+    branching = np.mean([len(v) for v in pairs.values()])
+    assert branching <= 8.5
+    xs, ys = next(batch_stream(toks, batch=4, seq_len=16, n_steps=1))
+    assert xs.shape == (4, 16) and ys.shape == (4, 16)
+    np.testing.assert_array_equal(xs[:, 1:], ys[:, :-1])

@@ -1,0 +1,77 @@
+"""End-to-end federated rounds: BFLN + all four baselines, chain + tampering."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FederatedTrainer, ModelBundle, make_bfln
+from repro.core.baselines import STRATEGY_FACTORIES
+from repro.data import dirichlet_partition, make_classification_dataset, pack_clients
+from repro.data.partition import sample_probe_batch
+from repro.models import classifier as clf
+from repro.optim import adam
+from repro.utils.tree import tree_index
+
+
+def _setup(m=6, n_clusters=2, seed=0):
+    (xt, yt), (xe, ye) = make_classification_dataset("synth10", seed=seed)
+    parts = dirichlet_partition(yt, m, 0.1, seed=seed)
+    cx, cy, tx, ty = pack_clients(xt, yt, parts, n_batches=3, batch_size=32)
+    probe = jnp.asarray(sample_probe_batch(xt, yt, category=1, psi=16))
+    cfg = clf.MLPConfig(in_dim=64, hidden=(64,), rep_dim=32, num_classes=10)
+    bundle = ModelBundle(functools.partial(clf.apply, cfg),
+                         functools.partial(clf.embed, cfg), 10)
+    sp = clf.init_stacked(cfg, jax.random.PRNGKey(seed), m)
+    return bundle, sp, map(jnp.asarray, (cx, cy)), (jnp.asarray(xe), jnp.asarray(ye)), probe
+
+
+def test_bfln_full_protocol_improves_and_chain_validates():
+    bundle, sp, (cx, cy), (xe, ye), probe = _setup()
+    strat = make_bfln(bundle, probe, n_clusters=2)
+    tr = FederatedTrainer(bundle, strat, adam(1e-3), local_epochs=2, n_clusters=2)
+    p, o = tr.init(sp)
+    for r in range(4):
+        p, o, rec = tr.run_round(r, p, o, cx, cy, xe, ye)
+    accs = [h.accuracy for h in tr.history]
+    losses = [h.mean_loss for h in tr.history]
+    assert accs[-1] > accs[0]
+    assert losses[-1] < losses[0]
+    assert tr.chain.validate()
+    assert tr.ledger.conserved()
+    # rewards were distributed each round and sum to the pool
+    for h in tr.history:
+        np.testing.assert_allclose(h.rewards.sum(), 20.0, rtol=1e-4)
+        assert h.producer >= 0
+    # balances grew from the initial stake on at least some clients
+    assert tr.ledger.balances.max() > 5.0
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGY_FACTORIES))
+def test_baselines_run_and_learn(name):
+    bundle, sp, (cx, cy), (xe, ye), _ = _setup(seed=1)
+    strat = STRATEGY_FACTORIES[name](bundle)
+    tr = FederatedTrainer(bundle, strat, adam(1e-3), local_epochs=2,
+                          use_chain=False)
+    p, o = tr.init(sp)
+    for r in range(3):
+        p, o, rec = tr.run_round(r, p, o, cx, cy, xe, ye)
+    assert tr.history[-1].mean_loss < tr.history[0].mean_loss
+    assert np.isfinite(tr.history[-1].accuracy)
+
+
+def test_tampered_client_gets_no_reward():
+    """A client committing a hash for params it did not train (freeriding)
+    fails consensus verification and is not paid (paper §IV-C)."""
+    bundle, sp, (cx, cy), (xe, ye), probe = _setup(seed=2)
+    strat = make_bfln(bundle, probe, n_clusters=2)
+    tr = FederatedTrainer(bundle, strat, adam(1e-3), local_epochs=1, n_clusters=2)
+    p, o = tr.init(sp)
+    fake = jax.tree.map(jnp.zeros_like, tree_index(sp, 0))
+    p, o, rec = tr.run_round(0, p, o, cx, cy, xe, ye, tamper={2: fake})
+    assert rec.verified_frac < 1.0
+    assert rec.rewards[2] == 0.0
+    assert rec.rewards[0] > 0.0
+    np.testing.assert_allclose(tr.ledger.balances[2], 5.0 )  # stake untouched
+    assert tr.ledger.conserved()

@@ -1,0 +1,45 @@
+"""Analytical cost model sanity: parameter counts reproduce the named model
+sizes (the strongest available check that configs are faithful)."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.flops import param_counts, step_cost
+
+
+@pytest.mark.parametrize("arch,total_b,active_b,tol", [
+    ("gemma3-4b", 4.3, 4.3, 0.45),            # 4B-class (vocab-heavy)
+    ("gemma-7b", 9.3, 9.3, 0.25),             # gemma-7b is really ~8.5B
+    ("llama4-maverick-400b-a17b", 400, 17, 0.25),
+    ("grok-1-314b", 314, 86, 0.30),
+    ("jamba-1.5-large-398b", 398, 98, 0.30),
+    ("internvl2-2b", 2.2, 2.2, 0.35),
+    ("h2o-danube-3-4b", 4.0, 4.0, 0.35),
+    ("rwkv6-3b", 3.1, 3.1, 0.35),
+    ("whisper-large-v3", 1.55, 1.55, 0.35),
+    ("minitron-8b", 8.3, 8.3, 0.35),
+])
+def test_param_counts_match_model_cards(arch, total_b, active_b, tol):
+    total, active = param_counts(ARCHS[arch])
+    assert abs(total / 1e9 - total_b) / total_b < tol, total / 1e9
+    assert abs(active / 1e9 - active_b) / active_b < tol, active / 1e9
+
+
+def test_moe_active_far_below_total():
+    total, active = param_counts(ARCHS["llama4-maverick-400b-a17b"])
+    assert active < total / 10
+
+
+def test_step_cost_monotonic_in_shape():
+    cfg = ARCHS["gemma-7b"]
+    small = step_cost(cfg, SHAPES["train_4k"])
+    assert small.flops_total > small.flops_fwd
+    decode = step_cost(cfg, SHAPES["decode_32k"])
+    assert decode.flops_total < small.flops_total
+    assert decode.state_bytes > 0
+
+
+def test_swa_skip_reduces_flops():
+    cfg = ARCHS["gemma3-4b"]
+    base = step_cost(cfg, SHAPES["prefill_32k"])
+    opt = step_cost(cfg, SHAPES["prefill_32k"], swa_skip=True)
+    assert opt.flops_total < base.flops_total * 0.7

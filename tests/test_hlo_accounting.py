@@ -1,0 +1,45 @@
+"""HLO collective accounting: trip-count weighting on synthetic modules."""
+from repro.launch.hlo import collective_bytes, collective_counts, computation_multipliers
+
+HLO = """
+HloModule test
+
+%region_body.1 (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %ar.1 = f32[64,64]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[128,64]{1,0} all-gather(%y), dimensions={0}
+  ROOT %t = (s32[], f32[64,64]) tuple(%i, %ar.1)
+}
+
+%region_cond.2 (p: (s32[], f32[64,64])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main.3 (a: f32[64,64]) -> f32[64,64] {
+  %rs.2 = f32[32,64]{1,0} reduce-scatter(%a), dimensions={0}
+  %w = (s32[], f32[64,64]) while(%init), condition=%region_cond.2, body=%region_body.1, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[64,64] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_multipliers_resolve_trip_counts():
+    mult = computation_multipliers(HLO)
+    assert mult["main.3"] == 1
+    assert mult["region_body.1"] == 12
+
+
+def test_collective_bytes_weighted():
+    got = collective_bytes(HLO)
+    ar = 64 * 64 * 4 * 12          # inside while ×12
+    ag = 128 * 64 * 4 * 12
+    rs = 32 * 64 * 4               # top level ×1
+    assert got["all-reduce"] == ar
+    assert got["all-gather"] == ag
+    assert got["reduce-scatter"] == rs
+    assert got["total"] == ar + ag + rs
+
+
+def test_collective_counts_weighted():
+    got = collective_counts(HLO)
+    assert got["all-reduce"] == 12
+    assert got["reduce-scatter"] == 1

@@ -1,0 +1,72 @@
+"""Incentive mechanism (Eqs. 7–9): property-based invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.incentives import allocate_rewards, apply_round_settlement
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    m=st.integers(2, 40),
+    c=st.integers(1, 8),
+    rho=st.floats(1.1, 3.0),
+    reward=st.floats(1.0, 100.0),
+    seed=st.integers(0, 2**16),
+)
+def test_total_reward_conserved(m, c, rho, reward, seed):
+    rng = np.random.default_rng(seed)
+    labels = jnp.asarray(rng.integers(0, c, m))
+    alloc = allocate_rewards(labels, c, reward, rho)
+    # Σ Γ(n_i) = ℜ exactly (over non-empty clusters)
+    np.testing.assert_allclose(float(jnp.sum(alloc.cluster_reward)), reward,
+                               rtol=1e-5)
+    # per-client payouts also sum to ℜ
+    np.testing.assert_allclose(float(jnp.sum(alloc.client_reward)), reward,
+                               rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rho=st.floats(1.05, 3.0), seed=st.integers(0, 2**16))
+def test_percapita_reward_increases_with_cluster_size(rho, seed):
+    """ρ>1 ⇒ bigger clusters pay more *per member* (the paper's design goal)."""
+    rng = np.random.default_rng(seed)
+    sizes = sorted(rng.integers(1, 10, 3).tolist())
+    labels = jnp.asarray(np.repeat(np.arange(3), sizes))
+    alloc = allocate_rewards(labels, 3, 20.0, rho)
+    per_capita = np.asarray(alloc.cluster_reward) / np.maximum(sizes, 1)
+    assert all(per_capita[i] <= per_capita[i + 1] + 1e-9 for i in range(2))
+
+
+def test_equal_shares_within_cluster():
+    labels = jnp.asarray([0, 0, 0, 1, 1, 2])
+    alloc = allocate_rewards(labels, 3, 20.0, 2.0)
+    r = np.asarray(alloc.client_reward)
+    np.testing.assert_allclose(r[0], r[1])
+    np.testing.assert_allclose(r[1], r[2])
+    np.testing.assert_allclose(r[3], r[4])
+
+
+def test_paper_rho2_example():
+    """ρ=2, clusters (3,1): κ = 20/10 = 2; Γ = (18, 2); per-capita (6, 2)."""
+    labels = jnp.asarray([0, 0, 0, 1])
+    alloc = allocate_rewards(labels, 2, 20.0, 2.0)
+    np.testing.assert_allclose(np.asarray(alloc.cluster_reward), [18.0, 2.0],
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(alloc.kappa), 2.0, rtol=1e-6)
+    np.testing.assert_allclose(float(alloc.fee), 0.5, rtol=1e-6)  # κ/N
+
+
+def test_settlement_routes_fees_to_producer():
+    labels = jnp.asarray([0, 0, 1, 1])
+    alloc = allocate_rewards(labels, 2, 20.0, 2.0)
+    balances = jnp.full((4,), 5.0)
+    verified = jnp.asarray([True, True, True, False])
+    new = apply_round_settlement(balances, alloc, producer=0, verified=verified)
+    new = np.asarray(new)
+    # producer 0 collected 3 fees; client 3 (unverified) got nothing, paid nothing
+    fee = float(alloc.fee)
+    assert np.isclose(new[3], 5.0)
+    expected_total = 20.0 + 4 * 5.0 - float(alloc.client_reward[3])
+    np.testing.assert_allclose(new.sum(), expected_total, rtol=1e-6)
+    assert new[0] > new[1]  # producer collected fees

@@ -1,0 +1,75 @@
+"""Launcher machinery: fl-round target build, dryrun lower on a small mesh
+(subprocess — device count must be set before jax initialises), flops model
+consistency with the registry."""
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.launch.flops import step_cost
+
+
+def test_fl_target_builds_abstract():
+    from repro.launch.fl_target import FLTargetConfig, stacked_param_specs
+    cfg = FLTargetConfig(n_clients=8, in_dim=32, hidden=64, rep_dim=16)
+    shapes = stacked_param_specs(cfg)
+    assert shapes["w0"].shape == (8, 32, 64)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_step_cost_defined_for_all_runnable_combos(arch):
+    for shape_name, shape in SHAPES.items():
+        ok, _ = shape_applicable(arch, shape_name)
+        if not ok:
+            continue
+        c = step_cost(ARCHS[arch], shape)
+        assert c.flops_total > 0 and c.hbm_bytes > 0
+        assert 0 < c.model_flops / c.flops_total < 1.2, (arch, shape_name)
+
+
+_DRYRUN_SMOKE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config, SHAPES
+from repro.launch import sharding as shd
+from repro.launch.mesh import _auto
+from repro.launch.specs import batch_pspecs, train_batch_specs
+from repro.models import lm
+from repro.models.transformer import param_specs
+from repro.optim import adamw
+import dataclasses
+
+# reduced arch on a 4x2 mini-mesh: the same machinery as production
+cfg = dataclasses.replace(get_config("internvl2-2b").reduced(),
+                          param_dtype="bfloat16")
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=_auto(2))
+pshape = param_specs(cfg)
+pspec = shd.param_pspecs(cfg, pshape, mesh)
+ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                            is_leaf=lambda x: isinstance(x, P))
+opt = adamw(1e-4)
+oshape = jax.eval_shape(opt.init, pshape)
+osh = ns(shd.opt_state_pspecs(oshape, pspec))
+shape = dataclasses.replace(SHAPES["train_4k"], seq_len=32, global_batch=8)
+batch = train_batch_specs(cfg, shape)
+bsh = ns(batch_pspecs(cfg, batch, mesh))
+with jax.set_mesh(mesh):
+    step = lm.make_train_step(cfg, opt)
+    compiled = jax.jit(step, in_shardings=(ns(pspec), osh, bsh),
+                       out_shardings=(NamedSharding(mesh, P()), ns(pspec), osh)
+                       ).lower(pshape, oshape, batch).compile()
+assert compiled.cost_analysis() is not None
+print("OK")
+"""
+
+
+def test_dryrun_machinery_on_mini_mesh():
+    res = subprocess.run([sys.executable, "-c", _DRYRUN_SMOKE],
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "OK" in res.stdout, res.stdout + res.stderr
