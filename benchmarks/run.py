@@ -4,6 +4,7 @@
   kernels_bench    — Pallas kernels vs oracles (µs/call)
   fig2_rewards     — paper Fig. 2 (reward trends vs cluster size)
   table2_accuracy  — paper Table II (accuracy under label skew)
+  sim_bench        — event-driven federation simulator throughput
   roofline         — §Roofline table from the dry-run artifacts
 
 ``python -m benchmarks.run [--full] [--rounds N]``
@@ -20,10 +21,11 @@ def main() -> None:
                     help="all 3 datasets in table2 (slow on CPU)")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--skip-table2", action="store_true")
+    ap.add_argument("--skip-sim", action="store_true")
     args = ap.parse_args()
 
     t0 = time.time()
-    from benchmarks import fig2_rewards, kernels_bench, roofline, table2_accuracy
+    from benchmarks import fig2_rewards, kernels_bench, roofline, sim_bench, table2_accuracy
 
     print("# kernels")
     kernels_bench.main()
@@ -32,6 +34,9 @@ def main() -> None:
     if not args.skip_table2:
         print("# table2 (accuracy)")
         table2_accuracy.main(args.full, args.rounds)
+    if not args.skip_sim:
+        print("# sim (federation simulator throughput)")
+        sim_bench.main(quick=not args.full)
     print("# roofline")
     roofline.main()
     print(f"bench,total_wall_s,{time.time()-t0:.0f},done")

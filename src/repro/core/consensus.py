@@ -10,7 +10,7 @@ consumed by the blockchain layer, `repro.blockchain`).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Collection, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +55,23 @@ def packing_queue(representatives: jax.Array) -> list[int]:
     return [r for r in reps if r >= 0]
 
 
-def producer_for_round(queue: list[int], round_idx: int) -> int:
-    """Round-robin slot assignment (paper: representatives 'take turns')."""
+def producer_for_round(queue: list[int], round_idx: int,
+                       active: Collection[int] | None = None) -> int:
+    """Round-robin slot assignment (paper: representatives 'take turns').
+
+    ``active`` (optional) restricts the slot to clients that are actually
+    online this round — under partial participation (``repro.sim``) a
+    representative may be a straggler or have dropped out, in which case its
+    slot deterministically falls through to the next queue member, exactly as
+    every validator would compute it from the same arrival set.
+    """
     if not queue:
         raise ValueError("empty packing queue")
-    return queue[round_idx % len(queue)]
+    if active is None:
+        return queue[round_idx % len(queue)]
+    start = round_idx % len(queue)
+    for off in range(len(queue)):
+        cand = queue[(start + off) % len(queue)]
+        if cand in active:
+            return cand
+    raise ValueError("no active producer in packing queue")

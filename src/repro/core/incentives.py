@@ -29,22 +29,39 @@ def allocate_rewards(
     n_clusters: int,
     total_reward: float,
     rho: float = 2.0,
+    participating: jax.Array | None = None,
 ) -> RewardAllocation:
     """Distribute the round's reward pool ℜ by cluster size.
 
     ``labels``: (m,) cluster assignment from PAA. Empty clusters get Γ=0 and
     do not absorb tokens (the denominator only sums over realised sizes, which
     matches Σ n_i = N in the paper since empty clusters have n_i = 0).
+
+    ``participating``: optional (m,) boolean/0-1 mask for partial-participation
+    rounds (client sampling, stragglers, dropouts — ``repro.sim``).  Cluster
+    sizes n_i count only participants, non-participants receive zero reward,
+    and the aggregation fee g = κ/N divides by the participant count, so the
+    full pool is always allocated over exactly the clients that delivered an
+    update.  ``None`` (the paper's full-participation setting) keeps the
+    original Eqs. 7–9 semantics unchanged.
     """
     labels = labels.astype(jnp.int32)
     m = labels.shape[0]
-    sizes = jnp.sum(jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32), axis=0)
+    if participating is None:
+        part = jnp.ones((m,), jnp.float32)
+    else:
+        part = participating.astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32) * part[:, None]
+    sizes = jnp.sum(onehot, axis=0)
     powered = jnp.where(sizes > 0, sizes ** rho, 0.0)
-    kappa = total_reward / jnp.maximum(jnp.sum(powered), 1e-12)
+    denom = jnp.sum(powered)
+    # zero participants ⇒ zero pool (not total_reward / ε): callers that skip
+    # the empty-round check must never see an astronomical κ or fee
+    kappa = jnp.where(denom > 0, total_reward / jnp.maximum(denom, 1e-12), 0.0)
     cluster_reward = kappa * powered                                  # Γ(n_i)
     per_capita = cluster_reward / jnp.maximum(sizes, 1.0)             # Γ/n_i
-    client_reward = per_capita[labels]
-    fee = kappa / m                                                   # Eq. 9
+    client_reward = per_capita[labels] * part
+    fee = kappa / jnp.maximum(jnp.sum(part), 1.0)                     # Eq. 9
     return RewardAllocation(cluster_reward, client_reward, kappa, fee)
 
 

@@ -41,6 +41,15 @@ class RoundRecord:
 
 
 @dataclass
+class ChainRoundResult:
+    """Outcome of the host-side blockchain protocol for one round's cohort."""
+    producer: int               # global client id of the packing client
+    verified: np.ndarray        # (n_cohort,) consensus verification mask
+    rewards: np.ndarray         # (n_cohort,) settled rewards (0 if unverified)
+    block: Any = None
+
+
+@dataclass
 class FederatedTrainer:
     """Runs strategy rounds over stacked clients; BFLN adds the chain."""
 
@@ -106,43 +115,92 @@ class FederatedTrainer:
         record = RoundRecord(round_idx, float(mean_loss), 0.0)
 
         if self.use_chain and agg.labels is not None:
-            # -- Fig.1 step 2: clients commit local-model hashes ----------- #
-            hashes = []
-            for i in range(n):
-                committed = (tamper or {}).get(i, tree_index(local_params, i))
-                h = hash_params(committed)
-                hashes.append(hash_params(tree_index(local_params, i)))
-                self.pool.submit(Transaction("model_hash", i, h, round_idx))
-
-            # -- CACC: centroid representatives -> packing queue ----------- #
-            cres = cacc.select_centroid_clients(agg.corr, agg.labels, self.n_clusters)
-            self._queue = cacc.packing_queue(cres.representatives) or self._queue or [0]
-            producer = cacc.producer_for_round(self._queue, round_idx)
-
-            # -- Fig.1 step 5: producer records aggregated hashes ---------- #
-            self.pool.submit(Transaction(
-                "agg_hash", producer, json.dumps(sorted(hashes)), round_idx))
-            block = self.chain.pack_block(round_idx, producer, self.pool)
-
-            # -- Fig.1 step 6: consensus verification + incentives --------- #
-            verified = self.chain.verify_round(block, n)
-            alloc = allocate_rewards(agg.labels, self.n_clusters,
-                                     self.total_reward, self.rho)
-            assert self.ledger is not None
-            self.ledger.mint_reward_pool(self.total_reward)
-            self.ledger.settle_round(np.asarray(alloc.client_reward),
-                                     float(alloc.fee), producer, verified)
-
+            cres = self.chain_round(round_idx, local_params, agg.labels,
+                                    agg.corr, tamper=tamper)
             record.labels = np.asarray(agg.labels)
             record.cluster_sizes = np.asarray(agg.cluster_sizes)
-            record.rewards = np.where(verified, np.asarray(alloc.client_reward), 0.0)
+            record.rewards = cres.rewards
             record.balances = self.ledger.balances.copy()
-            record.producer = producer
-            record.verified_frac = float(verified.mean())
+            record.producer = cres.producer
+            record.verified_frac = float(cres.verified.mean())
 
         record.accuracy = float(self._eval(agg.stacked_params, test_x, test_y))
         self.history.append(record)
         return agg.stacked_params, stacked_opt, record
+
+    def chain_round(
+        self,
+        round_idx: int,
+        local_params: Pytree,
+        labels: jax.Array,
+        corr: jax.Array,
+        cohort: np.ndarray | None = None,
+        arrived: np.ndarray | None = None,
+        tamper: dict[int, Pytree] | None = None,
+    ) -> ChainRoundResult:
+        """Host-side blockchain protocol (Fig. 1 steps 2/5/6) over one round's
+        *cohort* — the clients that actually trained this round.
+
+        ``local_params`` is cohort-stacked (slot axis); ``cohort`` maps slot →
+        global client id (default: identity over the full population — the
+        paper's 20-always-on-clients setting).  ``arrived`` masks slots whose
+        update reached the producer before the block slot: stragglers and
+        dropouts (``repro.sim``) never commit a hash and are never aggregated —
+        they simply miss the round.  ``tamper`` (keyed by global client id)
+        swaps the params a client *claims* for something else, exercising the
+        consensus rejection path.
+        """
+        assert self.ledger is not None
+        k = int(np.asarray(labels).shape[0])
+        cohort = np.arange(k) if cohort is None else np.asarray(cohort)
+        arrived = np.ones(k, bool) if arrived is None else np.asarray(arrived, bool)
+        n_total = self.ledger.n_clients
+        tamper = tamper or {}
+
+        if not arrived.any():
+            # nobody delivered an update: no block, the round's pool stays unminted
+            return ChainRoundResult(-1, np.zeros(k, bool), np.zeros(k))
+
+        # -- Fig.1 step 2: arrived clients commit local-model hashes ------- #
+        honest_hashes = []
+        for slot in range(k):
+            if not arrived[slot]:
+                continue
+            gid = int(cohort[slot])
+            honest = tree_index(local_params, slot)
+            committed = tamper.get(gid, honest)
+            self.pool.submit(Transaction("model_hash", gid,
+                                         hash_params(committed), round_idx))
+            honest_hashes.append(hash_params(honest))
+
+        # -- CACC: centroid representatives -> packing queue --------------- #
+        sel = cacc.select_centroid_clients(corr, labels, self.n_clusters)
+        queue = [int(cohort[slot]) for slot in cacc.packing_queue(sel.representatives)]
+        self._queue = queue or self._queue or [int(cohort[0])]
+        active = {int(g) for g in cohort[arrived]}
+        try:
+            producer = cacc.producer_for_round(self._queue, round_idx, active)
+        except ValueError:
+            producer = min(active)   # no representative arrived this round
+
+        # -- Fig.1 step 5: producer records aggregated hashes -------------- #
+        self.pool.submit(Transaction(
+            "agg_hash", producer, json.dumps(sorted(honest_hashes)), round_idx))
+        block = self.chain.pack_block(round_idx, producer, self.pool)
+
+        # -- Fig.1 step 6: consensus verification + incentives ------------- #
+        verified_total = self.chain.verify_round(block, n_total)
+        alloc = allocate_rewards(labels, self.n_clusters, self.total_reward,
+                                 self.rho, participating=jnp.asarray(arrived))
+        rewards_total = np.zeros(n_total)
+        rewards_total[cohort] = np.asarray(alloc.client_reward)
+        self.ledger.mint_reward_pool(self.total_reward)
+        self.ledger.settle_round(rewards_total, float(alloc.fee),
+                                 producer, verified_total)
+
+        verified = verified_total[cohort]
+        rewards = np.where(verified, rewards_total[cohort], 0.0)
+        return ChainRoundResult(producer, verified, rewards, block)
 
     def fit(self, stacked_params: Pytree, cx, cy, test_x, test_y,
             rounds: int, log_every: int = 0,

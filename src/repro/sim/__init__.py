@@ -1,0 +1,27 @@
+"""`repro.sim` — event-driven federation simulator.
+
+Layers realistic client populations (partial participation, stragglers,
+dropouts, Byzantine freeriders) on top of the BFLN core: a deterministic
+virtual-time event queue drives sampled cohorts through the full protocol —
+local training, PAA aggregation, hash commits, block packing, CACC
+verification and participation-aware reward settlement — or through FedBuff
+buffered asynchronous aggregation with staleness-weighted, chain-gated
+merging.
+"""
+from repro.sim.async_agg import (  # noqa: F401
+    BufferedAggregator,
+    BufferedUpdate,
+    MergeResult,
+    staleness_weight,
+    weighted_delta_mean,
+)
+from repro.sim.clock import LatencyModel, VirtualClock, make_speed_profile  # noqa: F401
+from repro.sim.driver import (  # noqa: F401
+    SimConfig,
+    SimReport,
+    SimRoundRecord,
+    SimulatedFederation,
+)
+from repro.sim.events import Event, EventQueue  # noqa: F401
+from repro.sim.population import ClientPopulation, PopulationSpec  # noqa: F401
+from repro.sim.sampler import SAMPLERS, SamplerState, get_sampler  # noqa: F401

@@ -1,0 +1,101 @@
+"""Buffered asynchronous aggregation (FedBuff-style) with staleness weights.
+
+Async mode removes the round barrier: clients are dispatched a snapshot of
+the global model, train at their own speed, and their *deltas* (update −
+snapshot) accumulate in a fixed-capacity buffer.  When the buffer fills, the
+server merges it in one shot and bumps the model version.  An update that
+trained against version ``v`` but merges at version ``v'`` has staleness
+``s = v' − v`` and is down-weighted
+
+    w(s) = (1 + s)^(-alpha)            (FedBuff / Nguyen et al., 2022)
+
+so slow clients still contribute but cannot drag the model backwards.
+
+The merge itself is the repo's one true weighted-mean collective —
+``cluster_mean_params`` with a single cluster — so the jittable inner program
+is shared with the synchronous PAA path (one kernel to optimise, one oracle
+to test against).  Chain integration is the caller's job: the driver gates
+merge weights with CACC verification, so tampered updates carry zero weight
+*and* zero reward.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import cluster_mean_params
+from repro.utils.tree import tree_index, tree_stack
+
+Pytree = Any
+
+
+def staleness_weight(staleness: jax.Array | np.ndarray,
+                     alpha: float = 0.5) -> jax.Array:
+    """(1 + s)^(-alpha); alpha=0 disables staleness discounting."""
+    s = jnp.asarray(staleness, jnp.float32)
+    return (1.0 + s) ** (-alpha)
+
+
+@jax.jit
+def weighted_delta_mean(stacked_deltas: Pytree, weights: jax.Array) -> Pytree:
+    """Normalised weighted mean over the leading buffer axis, via the shared
+    single-cluster ``cluster_mean_params`` collective (all-zero labels)."""
+    k = weights.shape[0]
+    labels = jnp.zeros((k,), jnp.int32)
+    merged = cluster_mean_params(stacked_deltas, labels, 1, weights=weights)
+    return tree_index(merged, 0)
+
+
+@dataclass(frozen=True)
+class BufferedUpdate:
+    client: int
+    delta: Pytree                 # local params − dispatch snapshot
+    version: int                  # server model version at dispatch time
+
+
+@dataclass
+class MergeResult:
+    delta: Pytree                 # staleness-weighted mean delta
+    clients: np.ndarray           # (K,) contributing client ids
+    staleness: np.ndarray         # (K,) int staleness per contribution
+    weights: np.ndarray           # (K,) effective merge weights
+
+
+@dataclass
+class BufferedAggregator:
+    """Fixed-capacity update buffer; :meth:`flush` merges and empties it."""
+
+    capacity: int = 16
+    alpha: float = 0.5
+    buffer: list[BufferedUpdate] = field(default_factory=list)
+
+    def add(self, update: BufferedUpdate) -> bool:
+        """Returns True when the buffer has reached capacity (time to flush)."""
+        self.buffer.append(update)
+        return len(self.buffer) >= self.capacity
+
+    def __len__(self) -> int:
+        return len(self.buffer)
+
+    def flush(self, current_version: int,
+              gate: np.ndarray | None = None) -> MergeResult:
+        """Merge everything buffered.  ``gate`` (optional, (K,) 0/1) zeroes
+        the merge weight of individual contributions — the driver passes the
+        chain's verification mask so unverified (tampered) updates are
+        excluded from the model as well as from rewards."""
+        if not self.buffer:
+            raise ValueError("flush of empty buffer")
+        clients = np.array([u.client for u in self.buffer], dtype=np.int64)
+        staleness = np.array([current_version - u.version for u in self.buffer],
+                             dtype=np.int64)
+        w = np.asarray(staleness_weight(staleness, self.alpha), np.float32)
+        if gate is not None:
+            w = w * np.asarray(gate, np.float32)
+        stacked = tree_stack([u.delta for u in self.buffer])
+        merged = weighted_delta_mean(stacked, jnp.asarray(w))
+        self.buffer = []
+        return MergeResult(merged, clients, staleness, w)

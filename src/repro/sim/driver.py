@@ -1,0 +1,457 @@
+"""`SimulatedFederation` — event-driven federation over a virtual population.
+
+Layers realistic client dynamics (sampling, stragglers, dropouts, Byzantine
+freeriders) on top of the existing BFLN machinery.  Per synchronous round:
+
+    1. availability draw → online pool → sampler picks the cohort,
+    2. cohort events scheduled on the virtual clock (arrival, update-ready
+       after per-client latency, dropout), block slot closes the round,
+    3. the arrived sub-cohort trains + PAA-aggregates in ONE jitted program
+       (arrival mask = aggregation weights on ``cluster_mean_params``),
+    4. `FederatedTrainer.chain_round` runs the full blockchain protocol over
+       the cohort — hash commits, CACC packing queue, block, verification,
+       participation-aware reward settlement on the population-wide ledger.
+
+Async mode (``mode="async"``) replaces 2–3 with FedBuff buffered
+aggregation: clients train against dispatched snapshots, finished deltas
+buffer up, and each buffer flush = one block + one staleness-weighted merge
+(merge weights are *gated by chain verification*, so tampered updates carry
+zero weight and zero reward).
+
+Everything is driven by seeded numpy generators and a deterministic event
+queue: two runs with the same config produce identical event logs, block
+hashes, ledger balances and final parameters.
+
+Modeling notes: cohort members that miss the deadline still burn local
+compute (their training is simulated) but their params never reach the
+producer — they keep their previous personalized model and earn nothing.
+Byzantine clients train honestly but *commit a hash for params they did not
+train* (the paper's freeriding attack); CACC verification catches the
+mismatch.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.blockchain import TokenLedger
+from repro.core import FederatedTrainer, ModelBundle, make_bfln
+from repro.core.aggregation import paa_round
+from repro.core.fl import global_evaluate, local_train
+from repro.models import classifier as clf
+from repro.optim import adam
+from repro.sim import events as ev
+from repro.sim.async_agg import BufferedAggregator, BufferedUpdate
+from repro.sim.clock import VirtualClock
+from repro.sim.events import EventQueue
+from repro.sim.population import ClientPopulation
+from repro.sim.sampler import SamplerState, get_sampler
+from repro.utils.tree import tree_index, tree_stack
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    rounds: int = 20                  # sync rounds, or async buffer flushes
+    sample_frac: float = 0.10
+    n_clusters: int = 5
+    local_epochs: int = 1
+    lr: float = 1e-3
+    deadline: float = 30.0            # virtual seconds per block slot (sync)
+    sampler: str = "uniform"
+    mode: str = "sync"                # "sync" | "async"
+    buffer_size: int = 16             # async: flush threshold K
+    staleness_alpha: float = 0.5      # async: w(s) = (1+s)^-alpha
+    server_lr: float = 1.0            # async: global += lr · merged delta
+    concurrency: int = 64             # async: target in-flight clients
+    total_reward: float = 20.0
+    rho: float = 2.0
+    initial_stake: float = 5.0
+    eval_every: int = 5               # 0 = only final eval
+    eval_clients: int = 128           # population sub-sample for evaluation
+    eval_examples: int = 1024         # shared-test sub-sample for evaluation
+    hidden: tuple[int, ...] = (64,)
+    rep_dim: int = 32
+    seed: int = 0
+
+
+@dataclass
+class SimRoundRecord:
+    round_idx: int
+    t_open: float
+    t_close: float
+    cohort: np.ndarray
+    arrived: np.ndarray               # (k,) bool
+    n_stragglers: int
+    n_dropouts: int
+    n_byzantine: int
+    producer: int
+    verified_frac: float
+    reward_paid: float
+    reward_burned: float
+    mean_loss: float
+    accuracy: float = float("nan")    # cohort accuracy (sync) / global (async)
+    staleness_mean: float = 0.0       # async only
+
+
+@dataclass
+class SimReport:
+    config: SimConfig
+    history: list[SimRoundRecord]
+    event_log: list[tuple]
+    final_accuracy: float
+    balances: np.ndarray
+    chain_valid: bool
+    n_blocks: int
+    ledger_conserved: bool
+
+    def summary(self) -> str:
+        h = self.history
+        paid = sum(r.reward_paid for r in h)
+        burned = sum(r.reward_burned for r in h)
+        return (f"{len(h)} rounds, {len(self.event_log)} events, "
+                f"final_acc={self.final_accuracy:.4f}, paid={paid:.1f}, "
+                f"burned={burned:.1f}, blocks={self.n_blocks}, "
+                f"chain_valid={self.chain_valid}, "
+                f"conserved={self.ledger_conserved}")
+
+
+class SimulatedFederation:
+    """Drives `FederatedTrainer` round logic over sampled cohorts of a
+    virtual client population, on a deterministic virtual clock."""
+
+    def __init__(self, population: ClientPopulation, config: SimConfig):
+        self.pop = population
+        self.cfg = config
+        n = population.n_clients
+
+        mcfg = clf.MLPConfig(in_dim=population.in_dim, hidden=config.hidden,
+                             rep_dim=config.rep_dim,
+                             num_classes=population.num_classes)
+        self.bundle = ModelBundle(functools.partial(clf.apply, mcfg),
+                                  functools.partial(clf.embed, mcfg),
+                                  population.num_classes)
+        self.opt = adam(config.lr)
+        strat = make_bfln(self.bundle, population.probe, config.n_clusters)
+        self.trainer = FederatedTrainer(
+            self.bundle, strat, self.opt, local_epochs=config.local_epochs,
+            n_clusters=config.n_clusters, total_reward=config.total_reward,
+            rho=config.rho, initial_stake=config.initial_stake)
+        # population-wide ledger (the trainer's chain_round settles against it)
+        self.trainer.ledger = TokenLedger(n, config.initial_stake)
+
+        self.params = clf.init_stacked(mcfg, jax.random.PRNGKey(config.seed), n)
+        # shared tamper payload for Byzantine commits (built once; chain_round
+        # hashes what each freerider *claims*, which never varies)
+        self._fake_params = jax.tree.map(jnp.zeros_like,
+                                         tree_index(self.params, 0))
+        self.last_labels = np.full(n, -1, dtype=np.int64)
+        self.sampler = get_sampler(config.sampler)
+
+        self.rng = np.random.default_rng(config.seed)
+        self.clock = VirtualClock()
+        self.queue = EventQueue()
+        self.event_log: list[tuple] = []
+        self.history: list[SimRoundRecord] = []
+
+        strategy = strat
+        opt = self.opt
+        embed_fn = self.bundle.embed_fn
+        probe = population.probe
+        n_clusters = config.n_clusters
+        epochs = config.local_epochs
+
+        @jax.jit
+        def _cohort_round(cohort_params, cx, cy, arrived_w):
+            """Local training (fresh per-round optimizer, standard for sampled
+            cohorts) + PAA aggregation weighted by the arrival mask."""
+            opt_state = jax.vmap(opt.init)(cohort_params)
+            extras = strategy.round_extras(cohort_params, cx, cy)
+            res = local_train(strategy.local_loss, opt, cohort_params,
+                              opt_state, cx, cy, extras, epochs)
+            paa = paa_round(embed_fn, res.params, probe, n_clusters,
+                            weights=arrived_w)
+            return res.params, paa, jnp.mean(res.mean_loss)
+
+        self._cohort_round = _cohort_round
+
+        @jax.jit
+        def _local_only(cohort_params, cx, cy):
+            """Async path: just the local updates (aggregation happens at
+            flush time in ``async_agg.weighted_delta_mean``)."""
+            opt_state = jax.vmap(opt.init)(cohort_params)
+            extras = strategy.round_extras(cohort_params, cx, cy)
+            res = local_train(strategy.local_loss, opt, cohort_params,
+                              opt_state, cx, cy, extras, epochs)
+            return res.params, jnp.mean(res.mean_loss)
+
+        self._local_only = _local_only
+        self._eval = jax.jit(functools.partial(global_evaluate,
+                                               self.bundle.apply_fn))
+
+    # ------------------------------------------------------------------ #
+    # shared helpers
+    # ------------------------------------------------------------------ #
+
+    def _log(self, event: ev.Event) -> None:
+        self.event_log.append(event.log_entry())
+
+    def _sampler_state(self) -> SamplerState:
+        return SamplerState(balances=self.trainer.ledger.balances,
+                            last_labels=self.last_labels,
+                            n_clusters=self.cfg.n_clusters)
+
+    def _tampers(self, cohort: np.ndarray, arrived: np.ndarray) -> dict:
+        """Byzantine freeriders commit hashes of params they did not train."""
+        return {int(gid): self._fake_params
+                for slot, gid in enumerate(cohort)
+                if arrived[slot] and self.pop.byzantine[gid]}
+
+    def _evaluate_clients(self, ids: np.ndarray) -> float:
+        sub = jnp.asarray(ids)
+        ex = self.pop.test_x[: self.cfg.eval_examples]
+        ey = self.pop.test_y[: self.cfg.eval_examples]
+        stacked = jax.tree.map(lambda x: x[sub], self.params)
+        return float(self._eval(stacked, ex, ey))
+
+    # ------------------------------------------------------------------ #
+    # synchronous mode
+    # ------------------------------------------------------------------ #
+
+    def _run_sync_round(self, r: int) -> SimRoundRecord:
+        cfg, pop, rng = self.cfg, self.pop, self.rng
+        t0 = self.clock.now
+        k = max(1, int(round(cfg.sample_frac * pop.n_clients)))
+
+        online = pop.online_clients(rng)
+        cohort = self.sampler(rng, online, k, self._sampler_state())
+        self.queue.push(t0 + cfg.deadline, ev.BLOCK_SLOT, round_idx=r)
+
+        dropouts: set[int] = set()        # classified at schedule time — a
+        for gid in cohort:                # dropout past the deadline is still
+            gid = int(gid)                # a death, not a straggler
+            self.queue.push(t0, ev.CLIENT_ARRIVAL, gid, r)
+            lat = pop.latency.draw(gid)
+            if rng.random() < pop.dropout[gid]:
+                dropouts.add(gid)
+                self.queue.push(t0 + lat * rng.uniform(0.1, 0.9),
+                                ev.DROPOUT, gid, r)
+            else:
+                self.queue.push(t0 + lat, ev.UPDATE_READY, gid, r)
+
+        arrived_set: set[int] = set()
+        while True:
+            e = self.queue.pop()
+            self.clock.advance_to(e.time)
+            self._log(e)
+            if e.kind == ev.BLOCK_SLOT and e.round_idx == r:
+                break
+            if e.round_idx != r:
+                continue                      # late event from an old round
+            if e.kind == ev.UPDATE_READY:
+                arrived_set.add(e.client)
+
+        arrived = np.array([int(g) in arrived_set for g in cohort], dtype=bool)
+        n_strag = int(len(cohort) - arrived.sum() - len(dropouts))
+
+        record = SimRoundRecord(
+            round_idx=r, t_open=t0, t_close=self.clock.now, cohort=cohort,
+            arrived=arrived, n_stragglers=n_strag, n_dropouts=len(dropouts),
+            n_byzantine=int(pop.byzantine[cohort][arrived].sum()),
+            producer=-1, verified_frac=0.0, reward_paid=0.0,
+            reward_burned=0.0, mean_loss=float("nan"))
+
+        if not arrived.any():
+            return record                     # empty round: no block minted
+
+        cohort_params = jax.tree.map(lambda x: x[jnp.asarray(cohort)],
+                                     self.params)
+        cx, cy = pop.cohort_data(cohort)
+        local_params, paa, mean_loss = self._cohort_round(
+            cohort_params, cx, cy, jnp.asarray(arrived, jnp.float32))
+
+        cres = self.trainer.chain_round(
+            r, local_params, paa.labels, paa.corr, cohort=cohort,
+            arrived=arrived, tamper=self._tampers(cohort, arrived))
+
+        # arrived clients adopt their cluster-aggregated model; stragglers
+        # and dropouts keep their previous personalized params
+        upd = np.asarray(cohort)[arrived]
+        new_rows = jax.tree.map(lambda x: x[jnp.asarray(np.flatnonzero(arrived))],
+                                paa.new_stacked_params)
+        self.params = jax.tree.map(
+            lambda P, rows: P.at[jnp.asarray(upd)].set(rows),
+            self.params, new_rows)
+
+        labels = np.asarray(paa.labels)
+        self.last_labels[upd] = labels[arrived]
+
+        record.producer = cres.producer
+        record.verified_frac = float(cres.verified[arrived].mean())
+        record.reward_paid = float(cres.rewards.sum())
+        record.reward_burned = float(cfg.total_reward - cres.rewards.sum())
+        record.mean_loss = float(mean_loss)
+        if cfg.eval_every and ((r + 1) % cfg.eval_every == 0):
+            ex = self.pop.test_x[: cfg.eval_examples]
+            ey = self.pop.test_y[: cfg.eval_examples]
+            # evaluate only the adopted (arrived) rows: stragglers keep their
+            # old params, and a cluster with zero arrivals yields a garbage row
+            record.accuracy = float(self._eval(new_rows, ex, ey))
+        return record
+
+    # ------------------------------------------------------------------ #
+    # asynchronous mode (FedBuff)
+    # ------------------------------------------------------------------ #
+
+    def _run_async(self) -> None:
+        cfg, pop, rng = self.cfg, self.pop, self.rng
+        if cfg.buffer_size + cfg.concurrency > pop.n_clients:
+            # buffered clients stay "busy" until their flush: a buffer that
+            # cannot fill from the remaining population stalls forever
+            raise ValueError(
+                f"buffer_size ({cfg.buffer_size}) + concurrency "
+                f"({cfg.concurrency}) exceeds the population "
+                f"({pop.n_clients}); the buffer could never fill")
+        version = 0
+        global_params = tree_index(self.params, 0)
+        snapshots: dict[int, Pytree] = {0: global_params}
+        inflight: dict[int, int] = {}          # client -> dispatch version
+        agg = BufferedAggregator(cfg.buffer_size, cfg.staleness_alpha)
+
+        def dispatch() -> None:
+            want = cfg.concurrency - len(inflight)
+            if want <= 0:
+                return
+            # a client already in flight OR sitting in the buffer must not be
+            # re-dispatched: a duplicate in one flush cohort would collapse
+            # its two rewards into one ledger scatter slot
+            busy = set(inflight) | {u.client for u in agg.buffer}
+            online = pop.online_clients(rng)
+            online = np.setdiff1d(online, np.fromiter(busy, np.int64,
+                                                      len(busy)))
+            picked = self.sampler(rng, online, want, self._sampler_state())
+            t = self.clock.now
+            for gid in picked:
+                gid = int(gid)
+                inflight[gid] = version
+                self.queue.push(t, ev.CLIENT_ARRIVAL, gid,
+                                round_idx=version, tag=version)
+                lat = pop.latency.draw(gid)
+                if rng.random() < pop.dropout[gid]:
+                    self.queue.push(t + lat * rng.uniform(0.1, 0.9),
+                                    ev.DROPOUT, gid, version, tag=version)
+                else:
+                    self.queue.push(t + lat, ev.UPDATE_READY, gid, version,
+                                    tag=version)
+
+        dispatch()
+        while version < cfg.rounds and self.queue:
+            e = self.queue.pop()
+            self.clock.advance_to(e.time)
+            self._log(e)
+            if e.kind == ev.DROPOUT:
+                inflight.pop(e.client, None)
+                dispatch()
+                continue
+            if e.kind != ev.UPDATE_READY:
+                continue
+            dispatched_v = inflight.pop(e.client, None)
+            if dispatched_v is None:
+                continue
+            agg.add(BufferedUpdate(e.client, None, dispatched_v))
+            if len(agg) >= cfg.buffer_size:
+                version, global_params = self._async_flush(
+                    agg, version, global_params, snapshots)
+                snapshots[version] = global_params
+                live = set(inflight.values()) | {version}
+                for v in [v for v in snapshots if v not in live]:
+                    del snapshots[v]
+            dispatch()
+
+        if version < cfg.rounds:
+            # event queue drained early (e.g. availability collapse) — the
+            # report simply carries fewer flushes than requested
+            self.event_log.append((self.clock.now, "queue_drained", -1,
+                                   version, 0))
+        self.params = jax.tree.map(
+            lambda g: jnp.broadcast_to(g[None], (pop.n_clients,) + g.shape),
+            global_params)
+
+    def _async_flush(self, agg: BufferedAggregator, version: int,
+                     global_params: Pytree, snapshots: dict) -> tuple:
+        """One buffer flush = one training batch + one block + one merge."""
+        cfg, pop = self.cfg, self.pop
+        clients = np.array([u.client for u in agg.buffer], dtype=np.int64)
+        versions = [u.version for u in agg.buffer]
+        k = len(clients)
+
+        base = tree_stack([snapshots[v] for v in versions])
+        cx, cy = pop.cohort_data(clients)
+        local_params, mean_loss = self._local_only(base, cx, cy)
+        deltas = jax.tree.map(lambda a, b: a - b, local_params, base)
+        # re-materialise the buffer with the actual deltas (kept lazy until
+        # now so every flush trains its K clients in one vmapped call)
+        agg.buffer = [BufferedUpdate(int(c), tree_index(deltas, i), v)
+                      for i, (c, v) in enumerate(zip(clients, versions))]
+
+        # chain: single-cluster CACC over the flush group
+        labels = jnp.zeros((k,), jnp.int32)
+        corr = jnp.eye(k, dtype=jnp.float32)
+        arrived = np.ones(k, dtype=bool)
+        cres = self.trainer.chain_round(
+            version, local_params, labels, corr, cohort=clients,
+            arrived=arrived, tamper=self._tampers(clients, arrived))
+
+        merge = agg.flush(version, gate=cres.verified.astype(np.float32))
+        global_params = jax.tree.map(
+            lambda g, d: g + cfg.server_lr * d.astype(g.dtype),
+            global_params, merge.delta)
+        new_version = version + 1
+
+        self.last_labels[clients] = 0
+        record = SimRoundRecord(
+            round_idx=version, t_open=self.clock.now, t_close=self.clock.now,
+            cohort=clients, arrived=arrived, n_stragglers=0, n_dropouts=0,
+            n_byzantine=int(pop.byzantine[clients].sum()),
+            producer=cres.producer,
+            verified_frac=float(cres.verified.mean()),
+            reward_paid=float(cres.rewards.sum()),
+            reward_burned=float(cfg.total_reward - cres.rewards.sum()),
+            mean_loss=float(mean_loss),
+            staleness_mean=float(merge.staleness.mean()))
+        if cfg.eval_every and (new_version % cfg.eval_every == 0):
+            stacked = jax.tree.map(lambda g: g[None], global_params)
+            ex = pop.test_x[: cfg.eval_examples]
+            ey = pop.test_y[: cfg.eval_examples]
+            record.accuracy = float(self._eval(stacked, ex, ey))
+        self.history.append(record)
+        return new_version, global_params
+
+    # ------------------------------------------------------------------ #
+
+    def run(self) -> SimReport:
+        cfg = self.cfg
+        if cfg.mode == "sync":
+            for r in range(cfg.rounds):
+                self.history.append(self._run_sync_round(r))
+        elif cfg.mode == "async":
+            self._run_async()
+        else:
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+
+        n_eval = min(cfg.eval_clients, self.pop.n_clients)
+        eval_ids = np.linspace(0, self.pop.n_clients - 1, n_eval).astype(int)
+        final_acc = self._evaluate_clients(eval_ids)
+        ledger = self.trainer.ledger
+        return SimReport(
+            config=cfg, history=self.history, event_log=self.event_log,
+            final_accuracy=final_acc, balances=ledger.balances.copy(),
+            chain_valid=self.trainer.chain.validate(),
+            n_blocks=len(self.trainer.chain.blocks),
+            ledger_conserved=ledger.conserved())

@@ -1,0 +1,70 @@
+"""Event types and the deterministic event queue for the federation simulator.
+
+The simulator is a classic discrete-event loop over *virtual* time: nothing
+sleeps, every latency is a number drawn from a seeded distribution, and the
+queue pops events in (time, insertion-seq) order so two runs with the same
+seed produce byte-identical event logs — the property every chain validator
+needs to replay a simulated round.
+
+Event kinds (ISSUE terminology):
+
+  * ``CLIENT_ARRIVAL`` — a sampled client accepts the round's task and starts
+    local training (sync mode) or is dispatched a global-model snapshot
+    (async mode),
+  * ``UPDATE_READY``   — the client's trained update reaches the aggregator
+    after its compute+network latency,
+  * ``DROPOUT``        — the client died mid-round; its update never arrives,
+  * ``BLOCK_SLOT``     — the DPoS block slot closes; whatever has arrived by
+    now is what the producer aggregates (sync mode deadline).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+CLIENT_ARRIVAL = "client_arrival"
+UPDATE_READY = "update_ready"
+DROPOUT = "dropout"
+BLOCK_SLOT = "block_slot"
+
+
+@dataclass(frozen=True, order=True)
+class Event:
+    """One scheduled occurrence.  Ordering is (time, seq): ``seq`` is the
+    queue's insertion counter, so simultaneous events resolve in the exact
+    order they were scheduled — deterministic under replay."""
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    client: int = field(compare=False, default=-1)
+    round_idx: int = field(compare=False, default=-1)
+    # free-form small payload (e.g. dispatch model version for async staleness)
+    tag: int = field(compare=False, default=0)
+
+    def log_entry(self) -> tuple:
+        """Compact hashable form for the replayable event log."""
+        return (round(self.time, 9), self.kind, self.client, self.round_idx, self.tag)
+
+
+class EventQueue:
+    """Min-heap of :class:`Event` with a deterministic tiebreak counter."""
+
+    def __init__(self) -> None:
+        self._heap: list[Event] = []
+        self._seq = 0
+
+    def push(self, time: float, kind: str, client: int = -1,
+             round_idx: int = -1, tag: int = 0) -> Event:
+        ev = Event(float(time), self._seq, kind, client, round_idx, tag)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,5 +1,8 @@
 """Data pipeline: Dirichlet partitioner invariants + packing shapes."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import dirichlet_partition, make_classification_dataset, pack_clients

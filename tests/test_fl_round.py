@@ -61,6 +61,44 @@ def test_baselines_run_and_learn(name):
     assert np.isfinite(tr.history[-1].accuracy)
 
 
+def test_tamper_settlement_exact():
+    """End-to-end: run_round(tamper=...) → Blockchain.verify_round zeroes the
+    tampered clients' rewards while every honest client settles exactly
+    reward − fee (+ all fees for the producer), and supply is conserved."""
+    bundle, sp, (cx, cy), (xe, ye), probe = _setup(m=6, seed=3)
+    strat = make_bfln(bundle, probe, n_clusters=2)
+    tr = FederatedTrainer(bundle, strat, adam(1e-3), local_epochs=1, n_clusters=2)
+    p, o = tr.init(sp)
+    fake = jax.tree.map(jnp.zeros_like, tree_index(sp, 0))
+    tampered = {1: fake, 4: jax.tree.map(lambda x: x + 1.0, fake)}
+    p, o, rec = tr.run_round(0, p, o, cx, cy, xe, ye, tamper=tampered)
+
+    n = 6
+    stake = tr.initial_stake
+    verified = np.array([i not in tampered for i in range(n)])
+    np.testing.assert_allclose(rec.verified_frac, verified.mean())
+    from repro.core.incentives import allocate_rewards
+    alloc = allocate_rewards(rec.labels, 2, tr.total_reward, tr.rho)
+    fee = float(alloc.fee)
+    for i in range(n):
+        expect = stake
+        if verified[i]:
+            expect += float(alloc.client_reward[i]) - fee
+        if i == rec.producer:
+            expect += fee * verified.sum()
+        np.testing.assert_allclose(tr.ledger.balances[i], expect, rtol=1e-5,
+                                   err_msg=f"client {i}")
+        if i in tampered:
+            assert rec.rewards[i] == 0.0
+    # tampered rewards are burned, not re-allocated
+    np.testing.assert_allclose(
+        rec.rewards.sum(),
+        tr.total_reward - float(alloc.client_reward[np.array([1, 4])].sum()),
+        rtol=1e-5)
+    assert tr.ledger.conserved()
+    assert tr.chain.validate()
+
+
 def test_tampered_client_gets_no_reward():
     """A client committing a hash for params it did not train (freeriding)
     fails consensus verification and is not paid (paper §IV-C)."""

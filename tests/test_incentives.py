@@ -1,6 +1,9 @@
 """Incentive mechanism (Eqs. 7–9): property-based invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.incentives import allocate_rewards, apply_round_settlement
