@@ -34,6 +34,16 @@ def main():
                  time_us(jax.jit(ref.cluster_agg_ref), flat, mix),
                  "oracle xla:cpu"))
 
+    bits = jax.random.bits(key, (100, 8192), dtype=jnp.uint32)
+    from repro.kernels.fingerprint import poly_weights
+    fw = jnp.asarray(poly_weights(8192))
+    rows.append(("fingerprint_pallas_100x8k",
+                 time_us(ops.fingerprint, bits, iters=2),
+                 "interpret (slow: python kernel body)"))
+    rows.append(("fingerprint_ref_100x8k",
+                 time_us(jax.jit(ref.fingerprint_ref), bits, fw),
+                 "oracle xla:cpu"))
+
     q = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
     k = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
     rows.append(("flash_attn_pallas_512", time_us(

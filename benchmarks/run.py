@@ -2,6 +2,7 @@
 """Benchmark harness:
 
   kernels_bench    — Pallas kernels vs oracles (µs/call)
+  commit_bench     — chain commit+verify path: hash_params vs fingerprints
   fig2_rewards     — paper Fig. 2 (reward trends vs cluster size)
   table2_accuracy  — paper Table II (accuracy under label skew)
   sim_bench        — event-driven federation simulator throughput
@@ -25,10 +26,13 @@ def main() -> None:
     args = ap.parse_args()
 
     t0 = time.time()
-    from benchmarks import fig2_rewards, kernels_bench, roofline, sim_bench, table2_accuracy
+    from benchmarks import (commit_bench, fig2_rewards, kernels_bench,
+                            roofline, sim_bench, table2_accuracy)
 
     print("# kernels")
     kernels_bench.main()
+    print("# commit (chain commitment path)")
+    commit_bench.main()
     print("# fig2 (reward trends)")
     fig2_rewards.main(rounds=min(args.rounds, 10))
     if not args.skip_table2:

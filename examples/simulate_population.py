@@ -67,7 +67,7 @@ def main():
     pop = ClientPopulation.from_spec(spec)
     print(f"population: {pop.n_clients} clients, "
           f"{int(pop.byzantine.sum())} byzantine, "
-          f"{int((pop.latency.speed > args.straggler_slowdown * 0.8).sum())} "
+          f"{int((pop.latency.speed > 1.25).sum())} "   # non-straggler max is 1.25
           f"stragglers  ({time.time()-t0:.1f}s)")
 
     cfg = SimConfig(

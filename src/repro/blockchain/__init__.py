@@ -1,3 +1,10 @@
 from repro.blockchain.chain import Block, Blockchain, hash_params  # noqa: F401
+from repro.blockchain.commit import (  # noqa: F401
+    AGG_COMMIT_KIND,
+    MerkleProof,
+    RoundCommitments,
+    commitment_leaf,
+    verify_membership,
+)
 from repro.blockchain.ledger import TokenLedger  # noqa: F401
 from repro.blockchain.txpool import Transaction, TxPool  # noqa: F401

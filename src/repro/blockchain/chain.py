@@ -2,17 +2,26 @@
 
 Permissioned DPoS-style chain: block producers come from CACC's packing queue
 (cluster-centroid clients) and take turns; there is no PoW.  Blocks carry two
-transaction kinds:
+commitment transaction kinds:
 
-  * ``model_hash`` — a training client commits the SHA-256 of its local model
-    before aggregation (Fig. 1 step 2),
-  * ``agg_hash``   — the producer (aggregation client) records the hashes of
-    every model it actually aggregated (Fig. 1 step 5).
+  * ``model_hash``  — a training client commits the fingerprint digest of its
+    local model before aggregation (Fig. 1 step 2),
+  * ``agg_commit``  — the producer (aggregation client) records a
+    **sender-bound** list of the digests it actually aggregated — one entry
+    per arrived client — plus a Merkle root over the (sender, round, digest)
+    leaves (Fig. 1 step 5; see ``repro.blockchain.commit``).
 
-Consensus (Fig. 1 step 6) — :meth:`Blockchain.verify_round` — rewards a client
-iff its committed hash appears in the producer's aggregation transaction.
-Everything is deterministic and replayable: hashing is canonical over leaf
-paths + raw bytes, so any validator reproduces identical block hashes.
+Consensus (Fig. 1 step 6) — :meth:`Blockchain.verify_round` — rewards client
+i iff its committed digest equals the digest the producer recorded *for
+sender i*.  The retired ``agg_hash`` transaction kind (bare hash set, no
+sender binding) is still parsed so old chains replay and so tests can
+demonstrate the hash-copy freeriding attack it permitted.
+
+Everything is deterministic and replayable: hashing is canonical over
+strings/JSON, so any validator reproduces identical block hashes.
+``hash_params`` (host-side SHA-256 over full param bytes) remains as the
+reference digest for tests and the commit-path benchmark baseline; the hot
+path uses the device-side batched fingerprint (`repro.kernels.fingerprint`).
 """
 from __future__ import annotations
 
@@ -24,6 +33,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.blockchain.commit import AGG_COMMIT_KIND, RoundCommitments
 from repro.blockchain.txpool import Transaction, TxPool
 
 Pytree = Any
@@ -116,16 +126,39 @@ class Blockchain:
 
     def verify_round(self, block: Block, n_clients: int) -> np.ndarray:
         """Boolean mask (n_clients,): client i's committed ``model_hash``
-        appears among the producer's ``agg_hash`` entries in ``block``."""
+        digest matches the digest the producer's ``agg_commit`` records for
+        sender i (identity-bound — copying a peer's digest fails, because
+        the producer's entry for the copier holds what the copier actually
+        delivered).
+
+        Legacy ``agg_hash`` blocks (pre-sender-binding) fall back to the old
+        set-membership rule so historic chains replay; new blocks never mix
+        the two kinds."""
         committed: dict[int, str] = {}
-        aggregated: set[str] = set()
+        bound: dict[int, str] | None = None
+        legacy: set[str] = set()
         for tx in block.transactions:
             if tx.kind == "model_hash":
                 committed[tx.sender] = tx.payload
+            elif tx.kind == AGG_COMMIT_KIND:
+                try:
+                    commits = RoundCommitments.from_payload(block.round_idx,
+                                                            tx.payload)
+                except (ValueError, KeyError, TypeError):
+                    bound = {}          # malformed record: nobody verifies
+                else:
+                    # first occurrence wins, matching RoundCommitments.proof
+                    bound = {}
+                    for s, d in commits.entries:
+                        bound.setdefault(s, d)
             elif tx.kind == "agg_hash":
-                aggregated.update(json.loads(tx.payload))
+                legacy.update(json.loads(tx.payload))
         ok = np.zeros((n_clients,), dtype=bool)
         for cid, h in committed.items():
-            if 0 <= cid < n_clients and h in aggregated:
-                ok[cid] = True
+            if not 0 <= cid < n_clients:
+                continue
+            if bound is not None:
+                ok[cid] = bound.get(cid) == h
+            else:
+                ok[cid] = h in legacy
         return ok

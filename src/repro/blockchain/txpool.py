@@ -8,7 +8,8 @@ from dataclasses import dataclass, field
 
 @dataclass(frozen=True)
 class Transaction:
-    kind: str        # "model_hash" | "agg_hash" | "reward" | "fee" | "stake"
+    kind: str        # "model_hash" | "agg_commit" | "agg_hash" (legacy)
+                     # | "reward" | "fee" | "stake"
     sender: int      # client id (-1 = network)
     payload: str     # hash hex / JSON body
     round_idx: int

@@ -21,5 +21,5 @@ from repro.core.consensus import packing_queue, producer_for_round, select_centr
 from repro.core.incentives import RewardAllocation, allocate_rewards  # noqa: F401
 from repro.core.pearson import pearson_affinity, pearson_matrix  # noqa: F401
 from repro.core.prototypes import classwise_prototypes, client_prototypes, prototype  # noqa: F401
-from repro.core.round import ChainRoundResult, FederatedTrainer, RoundRecord  # noqa: F401
+from repro.core.round import ChainRoundResult, FederatedTrainer, RoundRecord, digest_of  # noqa: F401
 from repro.core.spectral import kmeans, spectral_cluster, spectral_embedding  # noqa: F401

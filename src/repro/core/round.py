@@ -7,7 +7,6 @@ verification, token settlement).  The same driver runs every baseline strategy
 """
 from __future__ import annotations
 
-import json
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable
@@ -16,15 +15,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.blockchain import Blockchain, TokenLedger, Transaction, TxPool, hash_params
+from repro.blockchain import (
+    AGG_COMMIT_KIND,
+    Blockchain,
+    RoundCommitments,
+    TokenLedger,
+    Transaction,
+    TxPool,
+)
 from repro.core import consensus as cacc
 from repro.core.baselines import AggOut, ModelBundle, Strategy
 from repro.core.fl import LocalTrainResult, global_evaluate, local_train
 from repro.core.incentives import allocate_rewards
+from repro.kernels.fingerprint import cohort_digests
 from repro.optim import Optimizer
-from repro.utils.tree import tree_index
 
 Pytree = Any
+
+
+def digest_of(params: Pytree) -> str:
+    """Fingerprint digest of ONE client's (unstacked) param pytree — the
+    commitment a client would make for these params.  Convenience wrapper
+    for tests/tamper payloads; the round hot path digests the whole cohort
+    in one batched call instead."""
+    stacked = jax.tree.map(lambda x: x[None], params)
+    return cohort_digests(stacked)[0]
 
 
 @dataclass
@@ -136,7 +151,7 @@ class FederatedTrainer:
         corr: jax.Array,
         cohort: np.ndarray | None = None,
         arrived: np.ndarray | None = None,
-        tamper: dict[int, Pytree] | None = None,
+        tamper: dict[int, str | Pytree] | None = None,
     ) -> ChainRoundResult:
         """Host-side blockchain protocol (Fig. 1 steps 2/5/6) over one round's
         *cohort* — the clients that actually trained this round.
@@ -145,10 +160,15 @@ class FederatedTrainer:
         global client id (default: identity over the full population — the
         paper's 20-always-on-clients setting).  ``arrived`` masks slots whose
         update reached the producer before the block slot: stragglers and
-        dropouts (``repro.sim``) never commit a hash and are never aggregated —
-        they simply miss the round.  ``tamper`` (keyed by global client id)
-        swaps the params a client *claims* for something else, exercising the
-        consensus rejection path.
+        dropouts (``repro.sim``) never commit a digest and are never
+        aggregated — they simply miss the round.  ``tamper`` (keyed by global
+        client id) substitutes the digest a client *commits* — either a digest
+        string directly or a param pytree to digest — exercising the consensus
+        rejection path.
+
+        Commitments are batched and device-side: ONE jitted fingerprint call
+        digests the whole cohort, and the host pulls `O(cohort)` digest bytes
+        — never per-client full params (`repro.kernels.fingerprint`).
         """
         assert self.ledger is not None
         k = int(np.asarray(labels).shape[0])
@@ -161,17 +181,20 @@ class FederatedTrainer:
             # nobody delivered an update: no block, the round's pool stays unminted
             return ChainRoundResult(-1, np.zeros(k, bool), np.zeros(k))
 
-        # -- Fig.1 step 2: arrived clients commit local-model hashes ------- #
-        honest_hashes = []
+        # one fingerprint pass over the cohort-stacked params (slot-indexed)
+        digests = cohort_digests(local_params)
+
+        # -- Fig.1 step 2: arrived clients commit model digests ------------ #
+        entries: list[tuple[int, str]] = []    # what the producer aggregated
         for slot in range(k):
             if not arrived[slot]:
                 continue
             gid = int(cohort[slot])
-            honest = tree_index(local_params, slot)
-            committed = tamper.get(gid, honest)
-            self.pool.submit(Transaction("model_hash", gid,
-                                         hash_params(committed), round_idx))
-            honest_hashes.append(hash_params(honest))
+            claimed = tamper.get(gid, digests[slot])
+            if not isinstance(claimed, str):
+                claimed = digest_of(claimed)
+            self.pool.submit(Transaction("model_hash", gid, claimed, round_idx))
+            entries.append((gid, digests[slot]))
 
         # -- CACC: centroid representatives -> packing queue --------------- #
         sel = cacc.select_centroid_clients(corr, labels, self.n_clusters)
@@ -183,9 +206,10 @@ class FederatedTrainer:
         except ValueError:
             producer = min(active)   # no representative arrived this round
 
-        # -- Fig.1 step 5: producer records aggregated hashes -------------- #
+        # -- Fig.1 step 5: producer records sender-bound commitments ------- #
+        commits = RoundCommitments(round_idx, tuple(entries))
         self.pool.submit(Transaction(
-            "agg_hash", producer, json.dumps(sorted(honest_hashes)), round_idx))
+            AGG_COMMIT_KIND, producer, commits.to_payload(), round_idx))
         block = self.chain.pack_block(round_idx, producer, self.pool)
 
         # -- Fig.1 step 6: consensus verification + incentives ------------- #

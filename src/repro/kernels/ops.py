@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.cluster_agg import cluster_agg_pallas, mixing_matrix  # noqa: F401
+from repro.kernels.fingerprint import fingerprint_pallas
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.pearson import pearson_matrix_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
@@ -49,3 +50,11 @@ def rwkv6_wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
               u: jax.Array, s0: jax.Array) -> tuple[jax.Array, jax.Array]:
     """RWKV6 wkv recurrence; returns (y, final state)."""
     return _rwkv6(r, k, v, w, u, s0, interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n"))
+def fingerprint(flat_u32: jax.Array, block_m: int = 8,
+                block_n: int = 2048) -> jax.Array:
+    """Per-client polynomial fingerprint residues (m, N)u32 -> (m, 2)u32."""
+    return fingerprint_pallas(flat_u32, block_m=block_m, block_n=block_n,
+                              interpret=_on_cpu())

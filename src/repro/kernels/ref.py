@@ -18,6 +18,22 @@ def cluster_agg_ref(flat: jnp.ndarray, mix: jnp.ndarray) -> jnp.ndarray:
     return (mix @ flat.astype(jnp.float32)).astype(flat.dtype)
 
 
+def fingerprint_ref(flat_u32: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """(m, N) uint32 bits, (2, N) uint32 weight rows -> (m, 2) residues.
+
+    Exact mod-2^32 polynomial fingerprint (natural uint32 wraparound);
+    bit-identical to the Pallas kernel — integer math has no rounding, so
+    the reduction order is irrelevant.  The xor-shift pre-mix folds high
+    bits into low ones: float32 bit patterns of smooth params share long
+    trailing-zero runs, which a bare ``v·r^j`` sum would propagate into
+    the residues' low bits."""
+    x = flat_u32.astype(jnp.uint32)
+    x = x ^ (x >> 16)                  # mix(0) == 0, so zero padding stays neutral
+    a = jnp.sum(x * weights[0][None, :], axis=1, dtype=jnp.uint32)
+    b = jnp.sum(x * weights[1][None, :], axis=1, dtype=jnp.uint32)
+    return jnp.stack([a, b], axis=1)
+
+
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """Naive softmax attention with GQA; (B,S,Hq,hd)x(B,S,Hkv,hd)."""
     B, Sq, Hq, hd = q.shape

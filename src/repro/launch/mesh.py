@@ -3,14 +3,60 @@
 Functions, not module-level constants — importing this module never touches
 jax device state (critical: the dry-run sets XLA_FLAGS before first jax use,
 while tests/benches must keep seeing 1 CPU device).
+
+Version compatibility: the repo targets the modern mesh API
+(``jax.sharding.AxisType``, ``jax.set_mesh``, two-argument ``AbstractMesh``)
+but must run on the installed JAX 0.4.37, which predates all three.  The
+shims below feature-detect once and degrade gracefully:
+
+  * ``_auto(n)``          → ``None`` when ``AxisType`` is absent, and every
+    ``make_mesh`` call here omits ``axis_types`` in that case (0.4.x meshes
+    are implicitly fully-auto, so behaviour is identical);
+  * ``make_abstract_mesh`` → builds ``AbstractMesh`` through whichever
+    constructor signature the installed JAX accepts (0.4.x wants a single
+    ``((name, size), ...)`` tuple and raises ``TypeError: 'int' object is
+    not iterable`` on the modern two-argument form);
+  * ``use_mesh``          → ``jax.set_mesh`` context when available, else the
+    mesh itself (``Mesh`` is a context manager in 0.4.x).
 """
 from __future__ import annotations
 
 import jax
 
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
 
 def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+    """``n`` Auto axis types, or ``None`` when this JAX predates AxisType."""
+    if _AXIS_TYPE is None:
+        return None
+    return (_AXIS_TYPE.Auto,) * n
+
+
+def compat_make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_types = _auto(len(axes))
+    if axis_types is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Device-free ``AbstractMesh`` across both constructor generations."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axes)            # modern (sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))  # 0.4.x shape_tuple
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for jit/shard_map bodies."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh                                     # 0.4.x: Mesh is a CM
 
 
 def make_production_mesh(*, multi_pod: bool = False,
@@ -25,12 +71,12 @@ def make_production_mesh(*, multi_pod: bool = False,
     assert dm[0] * dm[1] == 256, dm
     shape = (2, *dm) if multi_pod else dm
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — for tests."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.blockchain import TokenLedger
-from repro.core import FederatedTrainer, ModelBundle, make_bfln
+from repro.core import FederatedTrainer, ModelBundle, digest_of, make_bfln
 from repro.core.aggregation import paa_round
 from repro.core.fl import global_evaluate, local_train
 from repro.models import classifier as clf
@@ -147,10 +147,10 @@ class SimulatedFederation:
         self.trainer.ledger = TokenLedger(n, config.initial_stake)
 
         self.params = clf.init_stacked(mcfg, jax.random.PRNGKey(config.seed), n)
-        # shared tamper payload for Byzantine commits (built once; chain_round
-        # hashes what each freerider *claims*, which never varies)
-        self._fake_params = jax.tree.map(jnp.zeros_like,
-                                         tree_index(self.params, 0))
+        # shared tamper digest for Byzantine commits (built once; chain_round
+        # substitutes the digest each freerider *claims*, which never varies)
+        self._fake_digest = digest_of(
+            jax.tree.map(jnp.zeros_like, tree_index(self.params, 0)))
         self.last_labels = np.full(n, -1, dtype=np.int64)
         self.sampler = get_sampler(config.sampler)
 
@@ -208,8 +208,8 @@ class SimulatedFederation:
                             n_clusters=self.cfg.n_clusters)
 
     def _tampers(self, cohort: np.ndarray, arrived: np.ndarray) -> dict:
-        """Byzantine freeriders commit hashes of params they did not train."""
-        return {int(gid): self._fake_params
+        """Byzantine freeriders commit digests of params they did not train."""
+        return {int(gid): self._fake_digest
                 for slot, gid in enumerate(cohort)
                 if arrived[slot] and self.pop.byzantine[gid]}
 

@@ -1,10 +1,22 @@
-"""Blockchain: hash links, merkle roots, consensus verification, ledger."""
+"""Blockchain: hash links, merkle roots, consensus verification (sender-bound
++ legacy), commitment Merkle membership proofs, ledger."""
 import json
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.blockchain import Block, Blockchain, TokenLedger, Transaction, TxPool, hash_params
+from repro.blockchain import (
+    AGG_COMMIT_KIND,
+    Block,
+    Blockchain,
+    RoundCommitments,
+    TokenLedger,
+    Transaction,
+    TxPool,
+    commitment_leaf,
+    hash_params,
+    verify_membership,
+)
 
 
 def test_hash_params_deterministic_and_sensitive():
@@ -41,11 +53,105 @@ def test_verify_round_accepts_matching_rejects_tampered():
     for i, h in enumerate(hashes):
         pool.submit(Transaction("model_hash", i, h, 0))
     # producer only aggregated clients 0,1,3 (client 2 freerode)
-    pool.submit(Transaction("agg_hash", 0, json.dumps([hashes[0], hashes[1],
-                                                       hashes[3]]), 0))
+    commits = RoundCommitments(0, ((0, hashes[0]), (1, hashes[1]),
+                                   (3, hashes[3])))
+    pool.submit(Transaction(AGG_COMMIT_KIND, 0, commits.to_payload(), 0))
     block = chain.pack_block(0, 0, pool)
     ok = chain.verify_round(block, 4)
     np.testing.assert_array_equal(ok, [True, True, False, True])
+
+
+def _copy_attack_block(chain, pool, *, legacy):
+    """3 clients: 0 and 1 honest (1's params happen to equal 0's), 2 is a
+    freerider that commits a COPY of client 0's digest.  The producer
+    aggregated digests d0 for client 0, d0 for client 1 (identical params),
+    and d2 (what client 2 actually delivered)."""
+    d0, d2 = "digest_honest", "digest_of_2s_actual_params"
+    pool.submit(Transaction("model_hash", 0, d0, 0))
+    pool.submit(Transaction("model_hash", 1, d0, 0))
+    pool.submit(Transaction("model_hash", 2, d0, 0))          # the copy attack
+    if legacy:
+        pool.submit(Transaction("agg_hash", 9, json.dumps(sorted([d0, d0, d2])), 0))
+    else:
+        commits = RoundCommitments(0, ((0, d0), (1, d0), (2, d2)))
+        pool.submit(Transaction(AGG_COMMIT_KIND, 9, commits.to_payload(), 0))
+    return chain.pack_block(0, 9, pool)
+
+
+def test_hash_copy_freerider_regression():
+    """THE anti-freeriding regression (ISSUE 2): a client committing a copy
+    of an honest peer's digest was VERIFIED (and hence paid) under the old
+    set-membership rule, and is REJECTED under sender-bound commitments —
+    while the honest duplicate (client 1, identical params to client 0)
+    stays verified in both."""
+    legacy_ok = Blockchain().verify_round(
+        _copy_attack_block(Blockchain(), TxPool(), legacy=True), 3)
+    np.testing.assert_array_equal(legacy_ok, [True, True, True])   # attack paid
+
+    bound_ok = Blockchain().verify_round(
+        _copy_attack_block(Blockchain(), TxPool(), legacy=False), 3)
+    np.testing.assert_array_equal(bound_ok, [True, True, False])   # rejected
+
+
+def test_agg_commit_preserves_duplicate_entries():
+    """Old format packed sorted(hashes) — duplicates collapsed under set
+    semantics.  The sender-bound record keeps one entry per arrived client."""
+    commits = RoundCommitments(4, ((7, "d"), (8, "d"), (9, "e")))
+    assert len(commits.entries) == 3
+    rt = RoundCommitments.from_payload(4, commits.to_payload())
+    assert rt.entries == commits.entries
+    assert rt.root == commits.root
+
+
+def test_merkle_membership_proofs_1000_clients():
+    """Per-client inclusion proofs on a 1000-entry commitment tree: every
+    proof verifies against the root in O(log n) hashes; any digest or
+    sender substitution breaks it."""
+    n = 1000
+    entries = tuple((i, f"digest_{i:04d}") for i in range(n))
+    commits = RoundCommitments(3, entries)
+    for sender in [0, 1, 499, 512, 998, 999]:
+        proof = commits.proof(sender)
+        assert len(proof.path) == 10              # ceil(log2(1000))
+        assert verify_membership(commits.root, sender, 3,
+                                 f"digest_{sender:04d}", proof)
+        # wrong digest, wrong sender, wrong round: all rejected
+        assert not verify_membership(commits.root, sender, 3, "evil", proof)
+        assert not verify_membership(commits.root, sender + 1, 3,
+                                     f"digest_{sender:04d}", proof)
+        assert not verify_membership(commits.root, sender, 4,
+                                     f"digest_{sender:04d}", proof)
+    # a tampered sibling path cannot reach the root
+    p = commits.proof(5)
+    bad = type(p)(p.leaf, ((("0" * 64), p.path[0][1]),) + p.path[1:])
+    assert not verify_membership(commits.root, 5, 3, "digest_0005", bad)
+
+
+def test_malformed_agg_commit_rejects_everyone():
+    """A producer whose commitment record is inconsistent (root does not
+    match its entries) verifies nobody — it must not crash consensus."""
+    chain, pool = Blockchain(), TxPool()
+    pool.submit(Transaction("model_hash", 0, "d0", 0))
+    commits = RoundCommitments(0, ((0, "d0"),))
+    body = json.loads(commits.to_payload())
+    body["root"] = "0" * 64
+    pool.submit(Transaction(AGG_COMMIT_KIND, 0, json.dumps(body), 0))
+    ok = chain.verify_round(chain.pack_block(0, 0, pool), 1)
+    np.testing.assert_array_equal(ok, [False])
+    # structurally bogus payloads (wrong JSON shapes) must reject, not raise
+    for payload in ['{"root": "r", "entries": 5}', '{"entries": null}', "[]"]:
+        pool.submit(Transaction("model_hash", 0, "d0", 1))
+        pool.submit(Transaction(AGG_COMMIT_KIND, 0, payload, 1))
+        ok = chain.verify_round(chain.pack_block(1, 0, pool), 1)
+        np.testing.assert_array_equal(ok, [False])
+
+
+def test_commitment_leaf_binds_all_fields():
+    base = commitment_leaf(1, 2, "d")
+    assert commitment_leaf(2, 2, "d") != base
+    assert commitment_leaf(1, 3, "d") != base
+    assert commitment_leaf(1, 2, "e") != base
+    assert commitment_leaf(1, 2, "d") == base
 
 
 def test_ledger_conservation_with_burn():

@@ -99,6 +99,30 @@ def test_tamper_settlement_exact():
     assert tr.chain.validate()
 
 
+def test_hash_copy_freerider_rejected_end_to_end():
+    """A freerider committing a COPY of an honest peer's digest (the attack
+    the old set-membership verify_round rewarded) is rejected by the
+    sender-bound protocol through the full round driver."""
+    bundle, sp, (cx, cy), (xe, ye), probe = _setup(m=6, seed=5)
+    strat = make_bfln(bundle, probe, n_clusters=2)
+    tr = FederatedTrainer(bundle, strat, adam(1e-3), local_epochs=1, n_clusters=2)
+    p, o = tr.init(sp)
+    # run once untampered to learn client 0's post-training digest, then
+    # replay the identical round with client 3 committing a copy of it
+    import copy
+    tr2 = FederatedTrainer(bundle, strat, adam(1e-3), local_epochs=1, n_clusters=2)
+    p2, o2 = tr2.init(copy.deepcopy(sp))
+    _, _, rec_clean = tr2.run_round(0, p2, o2, cx, cy, xe, ye)
+    victim_digest = next(t.payload for t in tr2.chain.head.transactions
+                         if t.kind == "model_hash" and t.sender == 0)
+    p, o, rec = tr.run_round(0, p, o, cx, cy, xe, ye,
+                             tamper={3: victim_digest})
+    assert rec.rewards[3] == 0.0                 # the copy is NOT rewarded
+    assert rec.rewards[0] > 0.0                  # the victim still is
+    assert rec.verified_frac == 5 / 6
+    assert tr.ledger.conserved() and tr.chain.validate()
+
+
 def test_tampered_client_gets_no_reward():
     """A client committing a hash for params it did not train (freeriding)
     fails consensus verification and is not paid (paper §IV-C)."""

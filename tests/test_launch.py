@@ -37,7 +37,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, SHAPES
 from repro.launch import sharding as shd
-from repro.launch.mesh import _auto
+from repro.launch.mesh import compat_make_mesh, use_mesh
 from repro.launch.specs import batch_pspecs, train_batch_specs
 from repro.models import lm
 from repro.models.transformer import param_specs
@@ -47,7 +47,7 @@ import dataclasses
 # reduced arch on a 4x2 mini-mesh: the same machinery as production
 cfg = dataclasses.replace(get_config("internvl2-2b").reduced(),
                           param_dtype="bfloat16")
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=_auto(2))
+mesh = compat_make_mesh((4, 2), ("data", "model"))
 pshape = param_specs(cfg)
 pspec = shd.param_pspecs(cfg, pshape, mesh)
 ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
@@ -58,7 +58,7 @@ osh = ns(shd.opt_state_pspecs(oshape, pspec))
 shape = dataclasses.replace(SHAPES["train_4k"], seq_len=32, global_batch=8)
 batch = train_batch_specs(cfg, shape)
 bsh = ns(batch_pspecs(cfg, batch, mesh))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     step = lm.make_train_step(cfg, opt)
     compiled = jax.jit(step, in_shardings=(ns(pspec), osh, bsh),
                        out_shardings=(NamedSharding(mesh, P()), ns(pspec), osh)
@@ -68,6 +68,7 @@ print("OK")
 """
 
 
+@pytest.mark.slow   # compiles a full reduced arch on an 8-device host mesh
 def test_dryrun_machinery_on_mini_mesh():
     res = subprocess.run([sys.executable, "-c", _DRYRUN_SMOKE],
                          capture_output=True, text=True,

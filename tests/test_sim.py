@@ -40,6 +40,7 @@ def _run(pop, seed=0, **kw):
 # determinism
 # --------------------------------------------------------------------------- #
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["sync", "async"])
 def test_fixed_seed_replays_identically(mode):
     kw = dict(mode=mode, buffer_size=6, concurrency=12)

@@ -5,6 +5,9 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow      # multi-round e2e training runs
 
 from repro.core import FederatedTrainer, ModelBundle, make_bfln, make_fedavg
 from repro.core.fl import evaluate
@@ -68,11 +71,16 @@ def test_chain_and_ledger_invariants_over_training():
     assert tr.chain.validate()
     assert tr.ledger.conserved()
     assert len(tr.chain.blocks) == 5  # genesis + 4 rounds
-    # every block carries the clients' model-hash txs + producer agg tx
+    # every block carries the clients' model-hash txs + the producer's
+    # sender-bound aggregation commitment (one entry per arrived client)
+    from repro.blockchain import AGG_COMMIT_KIND, RoundCommitments
     for block in tr.chain.blocks[1:]:
         kinds = [t.kind for t in block.transactions]
-        assert kinds.count("agg_hash") == 1
+        assert kinds.count(AGG_COMMIT_KIND) == 1
         assert kinds.count("model_hash") == 10
+        agg = next(t for t in block.transactions if t.kind == AGG_COMMIT_KIND)
+        commits = RoundCommitments.from_payload(block.round_idx, agg.payload)
+        assert len(commits.entries) == 10
 
 
 def test_lm_substrate_learns_token_stream():
