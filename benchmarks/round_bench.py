@@ -1,0 +1,187 @@
+"""Sync-round hot path: legacy (pre-arena) driver vs the fused round engine.
+
+Measures steady-state sync-round latency at population scale two ways on the
+same seeded population:
+
+  * ``engine=False`` — the retired hot path: eager per-leaf cohort gather,
+    jitted train+PAA, a second jitted fingerprint pipeline, per-leaf scatter
+    that reallocates the full (n_clients, N_params) stack every round, and a
+    ``global_evaluate`` that jit-recompiles for every distinct arrived-client
+    count;
+  * ``engine=True`` — ONE donated fixed-shape jitted step per round
+    (`repro.core.engine`): arena gather → train → PAA → digests → masked
+    scatter-back, plus fixed-shape masked eval whose outputs stay on device
+    until end of run.
+
+The headline config evaluates every round on a 256-example shared test
+slice: the eval recompile pathology this PR kills is *count*-dependent (one
+compile per distinct arrival count), not eval-size-dependent, and a larger
+metric batch only adds identical GEMM time to both paths, drowning the
+round being measured.  A heavy-eval variant (the SimConfig default 1024
+examples) is measured and reported alongside.
+
+Also asserts the two paths replay identically (block hashes + balances) and
+that the engine compiled each used entry exactly once, then emits
+``BENCH_round.json`` (steady-state round ms, compile counts, peak host
+bytes, per-round population realloc) so the perf trajectory is tracked PR
+over PR.
+
+Prints ``round,<name>,<us_per_round>,<derived>`` CSV like the other benches.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.sim import ClientPopulation, PopulationSpec, SimConfig, SimulatedFederation
+from repro.utils.tree import tree_bytes
+
+WARMUP = 3            # rounds excluded from the steady-state mean (compiles)
+
+
+def _build(engine: bool, n_clients: int, sample_frac: float, rounds: int,
+           eval_examples: int) -> SimulatedFederation:
+    # fresh population per driver: LatencyModel draws advance an internal rng,
+    # so sharing one instance would desynchronise the second run
+    spec = PopulationSpec(n_clients=n_clients, straggler_frac=0.1,
+                          dropout_rate=0.03, byzantine_frac=0.05, seed=0)
+    pop = ClientPopulation.from_spec(spec)
+    cfg = SimConfig(rounds=rounds, sample_frac=sample_frac, n_clusters=5,
+                    eval_every=1, eval_examples=eval_examples, seed=0,
+                    engine=engine)
+    return SimulatedFederation(pop, cfg)
+
+
+def _compile_counts(sim: SimulatedFederation) -> dict[str, int]:
+    if sim.engine is not None:
+        return sim.engine.cache_sizes()
+    return {"_cohort_round": sim._cohort_round._cache_size(),
+            "_eval": sim._eval._cache_size(),
+            "_eval_final": sim._eval_final._cache_size()}
+
+
+def _run(engine: bool, n_clients: int, sample_frac: float, rounds: int,
+         eval_examples: int) -> dict:
+    sim = _build(engine, n_clients, sample_frac, rounds, eval_examples)
+    times_ms = []
+    for r in range(rounds):
+        t0 = time.perf_counter()
+        sim.history.append(sim._run_sync_round(r))
+        times_ms.append((time.perf_counter() - t0) * 1e3)
+    sim._finalize_history()        # drain deferred (overlapped) eval outputs
+
+    # population-allocation metric: the engine donates the arena (in-place
+    # update, 0 bytes); the legacy scatter rebuilds the full stacked pytree
+    if engine:
+        ptr = sim.arena.data.unsafe_buffer_pointer()
+        realloc = 0
+    else:
+        ptr = None
+        realloc = tree_bytes(sim.params)
+    # separate phase: tracemalloc slows every Python allocation, so host-byte
+    # accounting runs over extra (untimed) steady-state rounds
+    tracemalloc.start()
+    for r in range(rounds, rounds + 5):
+        sim.history.append(sim._run_sync_round(r))
+    sim._finalize_history()
+    _, peak_host = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    if engine:
+        assert sim.arena.data.unsafe_buffer_pointer() == ptr, \
+            "arena buffer was reallocated (donation regressed)"
+
+    steady = times_ms[WARMUP:] or times_ms
+    counts = sorted({int(rec.arrived.sum()) for rec in sim.history})
+    return {
+        "engine": engine,
+        "rounds": rounds,
+        "first_round_ms": round(times_ms[0], 2),
+        "steady_ms": round(float(np.mean(steady)), 3),
+        "steady_p50_ms": round(float(np.median(steady)), 3),
+        "distinct_arrival_counts": len(counts),
+        "compile_counts": _compile_counts(sim),
+        "peak_host_bytes": int(peak_host),
+        "population_realloc_bytes_per_round": int(realloc),
+        "block_hashes": [b.block_hash() for b in sim.trainer.chain.blocks],
+        "balances": sim.trainer.ledger.balances,
+    }
+
+
+def _case(n_clients: int, sample_frac: float, rounds: int,
+          eval_examples: int) -> dict:
+    legacy = _run(False, n_clients, sample_frac, rounds, eval_examples)
+    engine = _run(True, n_clients, sample_frac, rounds, eval_examples)
+
+    # correctness gates: identical replay, exactly one compile per used entry
+    assert legacy["block_hashes"] == engine["block_hashes"], \
+        "engine replay diverged from the legacy driver"
+    assert np.array_equal(legacy["balances"], engine["balances"])
+    used = {k: v for k, v in engine["compile_counts"].items() if v}
+    assert all(v == 1 for v in used.values()), \
+        f"engine entry recompiled: {engine['compile_counts']}"
+    assert engine["distinct_arrival_counts"] > 1, \
+        "benchmark population produced constant arrival counts"
+
+    drop = ("block_hashes", "balances", "engine", "rounds")
+    return {
+        "eval_examples": eval_examples,
+        "distinct_arrival_counts": engine["distinct_arrival_counts"],
+        "legacy": {k: v for k, v in legacy.items() if k not in drop},
+        "engine": {k: v for k, v in engine.items() if k not in drop},
+        "steady_speedup": round(legacy["steady_ms"] / engine["steady_ms"], 2),
+        "replay_identical": True,
+    }
+
+
+def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
+         out: str = "BENCH_round.json", heavy_eval: bool = True) -> dict:
+    cases = {"headline_eval256": _case(n_clients, sample_frac, rounds, 256)}
+    if heavy_eval:
+        cases["heavy_eval1024"] = _case(n_clients, sample_frac, rounds, 1024)
+
+    result = {
+        "bench": "round",
+        "n_clients": n_clients,
+        "cohort": max(1, int(round(sample_frac * n_clients))),
+        "rounds": rounds,
+        **cases,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    for cname, case in cases.items():
+        for side in ("legacy", "engine"):
+            row = case[side]
+            print(f"round,{cname}_{side},{row['steady_ms'] * 1e3:.0f},"
+                  f"n={n_clients} cohort={result['cohort']} rounds={rounds} "
+                  f"first_ms={row['first_round_ms']} "
+                  f"compiles={sum(row['compile_counts'].values())} "
+                  f"realloc_mb_per_round="
+                  f"{row['population_realloc_bytes_per_round'] / 1e6:.1f}")
+        print(f"round,{cname}_speedup,{case['steady_speedup']:.2f},"
+              f"replay_identical=True "
+              f"arrival_counts={case['distinct_arrival_counts']} "
+              f"engine_compiles_per_entry=1")
+    headline = cases["headline_eval256"]["steady_speedup"]
+    print(f"round,result,{headline:.2f},-> {out}")
+    if headline < 5:
+        print(f"round,WARNING,0,headline speedup {headline:.2f}x below the "
+              f"5x target")
+    return result
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="CI smoke: small population, few rounds, no heavy case")
+    p.add_argument("--n-clients", type=int, default=None)
+    p.add_argument("--rounds", type=int, default=None)
+    p.add_argument("--out", default="BENCH_round.json")
+    args = p.parse_args()
+    n = args.n_clients or (200 if args.quick else 1000)
+    r = args.rounds or (10 if args.quick else 50)
+    main(n_clients=n, rounds=r, out=args.out, heavy_eval=not args.quick)

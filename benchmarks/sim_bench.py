@@ -31,12 +31,22 @@ def _warm(sim: SimulatedFederation) -> None:
     else:
         k = cfg.buffer_size
     cohort = np.arange(k)
-    params = jax.tree.map(lambda x: x[:k], sim.params)
     cx, cy = pop.cohort_data(cohort)
-    if cfg.mode == "sync":
-        out = sim._cohort_round(params, cx, cy, jnp.ones((k,), jnp.float32))
+    if sim.engine is not None:
+        # arena engine: warm the fused step, then rebind (donated input)
+        if cfg.mode == "sync":
+            sim.arena.data, out = sim.engine.sync_step(
+                sim.arena.data, jnp.asarray(cohort), cx, cy,
+                jnp.zeros((k,), jnp.float32))   # zero mask: no-op scatter
+            out = out.residues
+        else:
+            out, _, _ = sim.engine.async_step(sim.arena.data[:k], cx, cy)
     else:
-        out = sim._local_only(params, cx, cy)
+        params = jax.tree.map(lambda x: x[:k], sim.params)
+        if cfg.mode == "sync":
+            out = sim._cohort_round(params, cx, cy, jnp.ones((k,), jnp.float32))
+        else:
+            out = sim._local_only(params, cx, cy)
     jax.block_until_ready(jax.tree.leaves(out)[0])
 
 

@@ -15,11 +15,17 @@ class Transaction:
     round_idx: int
 
     def tx_hash(self) -> str:
-        body = json.dumps(
-            {"kind": self.kind, "sender": self.sender,
-             "payload": self.payload, "round": self.round_idx},
-            sort_keys=True)
-        return hashlib.sha256(body.encode()).hexdigest()
+        # memoised: computed at submit, reused by merkle build + validation
+        # (frozen dataclass -> write through __dict__; not a compared field)
+        h = self.__dict__.get("_tx_hash")
+        if h is None:
+            body = json.dumps(
+                {"kind": self.kind, "sender": self.sender,
+                 "payload": self.payload, "round": self.round_idx},
+                sort_keys=True)
+            h = hashlib.sha256(body.encode()).hexdigest()
+            object.__setattr__(self, "_tx_hash", h)
+        return h
 
 
 @dataclass

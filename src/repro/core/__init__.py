@@ -18,6 +18,7 @@ from repro.core.baselines import (  # noqa: F401
     make_fedprox,
 )
 from repro.core.consensus import packing_queue, producer_for_round, select_centroid_clients  # noqa: F401
+from repro.core.engine import RoundEngine, SyncRoundOut  # noqa: F401
 from repro.core.incentives import RewardAllocation, allocate_rewards  # noqa: F401
 from repro.core.pearson import pearson_affinity, pearson_matrix  # noqa: F401
 from repro.core.prototypes import classwise_prototypes, client_prototypes, prototype  # noqa: F401

@@ -33,6 +33,37 @@ class PAAResult(NamedTuple):
     cluster_sizes: jax.Array       # (n_clusters,)
 
 
+def _cluster_weights(labels: jax.Array, n_clusters: int,
+                     weights: jax.Array | None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared membership weights: (onehot (m,C), weighted onehot, denom (C,))."""
+    m = labels.shape[0]
+    onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)      # (m, C)
+    w = jnp.ones((m,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    wo = onehot * w[:, None]                                            # (m, C)
+    denom = jnp.maximum(jnp.sum(wo, axis=0), 1e-9)                      # (C,)
+    return onehot, wo, denom
+
+
+def cluster_mean_rows(rows: jax.Array, labels: jax.Array, n_clusters: int,
+                      weights: jax.Array | None = None) -> jax.Array:
+    """Cluster-masked FedAvg over **arena rows** — the flat (m, N) form of
+    ``cluster_mean_params`` (same two-step math, identical sums).
+
+    The stacked params already live as one ``(m, N_params)`` matrix
+    (``repro.runtime.arena``), so the whole FedAvg is two matmuls instead of
+    a per-leaf tree map — exactly the input shape ``kernels.cluster_agg``
+    streams on TPU.  Note: a single (C,m)×(m,N) contraction may block its
+    m-loop differently than the per-leaf dots at large m, so results can
+    drift from ``cluster_mean_params`` by float ulps; the fused round engine
+    therefore keeps the per-leaf form for bit-identical legacy replay and
+    this form is the TPU kernel-path input.
+    """
+    onehot, wo, denom = _cluster_weights(labels, n_clusters, weights)
+    reduce_w = (wo / denom[None, :]).T                                  # (C, m)
+    means = jnp.tensordot(reduce_w, rows.astype(jnp.float32), axes=(1, 0))
+    return jnp.tensordot(onehot, means, axes=(1, 0)).astype(rows.dtype)
+
+
 def cluster_mean_params(stacked_params: Pytree, labels: jax.Array, n_clusters: int,
                         weights: jax.Array | None = None,
                         method: str = "two_step") -> Pytree:
@@ -51,11 +82,7 @@ def cluster_mean_params(stacked_params: Pytree, labels: jax.Array, n_clusters: i
         gather back: O(C·N_params) collective bytes, an m/C× win measured in
         EXPERIMENTS.md §Perf.  Mathematically identical (same sums).
     """
-    m = labels.shape[0]
-    onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)  # (m, C)
-    w = jnp.ones((m,), jnp.float32) if weights is None else weights.astype(jnp.float32)
-    wo = onehot * w[:, None]                                        # (m, C)
-    denom = jnp.maximum(jnp.sum(wo, axis=0), 1e-9)                  # (C,)
+    onehot, wo, denom = _cluster_weights(labels, n_clusters, weights)
 
     if method == "mix":
         # membership[i, j] = w_j * [labels_i == labels_j] / sum_cluster_w

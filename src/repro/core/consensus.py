@@ -10,6 +10,7 @@ consumed by the blockchain layer, `repro.blockchain`).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Collection, NamedTuple
 
 import jax
@@ -22,6 +23,7 @@ class CentroidResult(NamedTuple):
     centroids: jax.Array         # (n_clusters, m) mean Pearson row per cluster
 
 
+@partial(jax.jit, static_argnames=("n_clusters",))
 def select_centroid_clients(corr: jax.Array, labels: jax.Array, n_clusters: int) -> CentroidResult:
     """Paper Eqs. 4–6 on the Pearson matrix.
 

@@ -1,0 +1,191 @@
+"""Fused, buffer-donated federated round engine over the parameter arena.
+
+BFLN's hot path (paper Fig. 1 steps 3–5) used to be a chain of separate
+device programs with host round-trips between them: an eager per-leaf cohort
+gather, the jitted train+PAA program, a second jitted fingerprint pipeline,
+an eager per-leaf scatter that reallocated the full population params, and a
+``global_evaluate`` whose leading dim varied with the arrival count — one
+jit recompile per distinct count.
+
+The engine collapses all of it into ONE jitted, ``donate_argnums``-donated
+program per (mode, cohort_size):
+
+    arena gather → local_train → PAA (prototypes, Pearson, spectral,
+    cluster-masked mean) → cohort fingerprint residues →
+    masked scatter-back into the donated arena
+
+Arrival is a fixed-shape mask everywhere — no ``np.flatnonzero`` dynamic
+indexing, no varying leading dims — so the jit cache hits every round and
+the arena buffer is updated in place (donation) instead of reallocating
+O(n_clients · N_params) bytes.  Only O(cohort) bytes cross the host
+boundary per round: fingerprint residues, cluster labels, the Pearson
+matrix for CACC, and scalar loss/accuracy.
+
+Evaluation entries are split so each compiles exactly once: a fixed-shape
+mask-weighted cohort eval (round metric), a single-row global eval (async),
+and a population eval with its own entry (final metric) so the final pass
+never retraces the round-eval program.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import cluster_mean_params
+from repro.core.fl import local_train
+from repro.core.pearson import pearson_affinity, pearson_matrix
+from repro.core.prototypes import client_prototypes
+from repro.core.spectral import spectral_cluster
+from repro.kernels.fingerprint import fingerprint_rows, format_digest
+from repro.runtime.arena import ArenaLayout, bitcast_u32
+
+Pytree = Any
+
+
+class SyncRoundOut(NamedTuple):
+    """Device outputs of one fused sync round (all O(cohort) or smaller)."""
+    labels: jax.Array       # (k,) cluster assignment
+    corr: jax.Array         # (k, k) Pearson matrix (CACC input)
+    residues: jax.Array     # (k, 2) uint32 fingerprint residues
+    mean_loss: jax.Array    # scalar
+    new_rows: jax.Array     # (k, N) the cohort's post-scatter arena rows —
+                            # eval reads THESE, never the full arena, so the
+                            # next round's donation has no pending consumer
+
+
+class RoundEngine:
+    """Jitted entry points for arena-backed federated rounds.
+
+    One instance per simulation; jax caches one executable per entry point
+    and cohort size (shapes are otherwise fixed by construction, so varying
+    *arrival counts* never retrace).  ``sync_step`` donates the arena —
+    callers must rebind, e.g.
+    ``arena.data = engine.sync_step(arena.data, ...)[0]``.
+    """
+
+    def __init__(
+        self,
+        layout: ArenaLayout,
+        *,
+        apply_fn: Callable,
+        embed_fn: Callable,
+        strategy,                       # repro.core.baselines.Strategy
+        opt,                            # repro.optim.Optimizer
+        probe: jax.Array,
+        n_clusters: int,
+        local_epochs: int,
+        kmeans_iters: int = 25,
+        stacked_apply_fn: Callable | None = None,
+    ):
+        self.layout = layout
+        self.n_clusters = n_clusters
+
+        def _client_accs(params, ex, ey):
+            """(m,) per-client accuracy on the shared eval batch.  Uses the
+            model's width-concatenated stacked forward when available — the
+            vmap form broadcasts the shared batch into a batched dot that
+            XLA CPU lowers ~2.5× slower at 100-client cohorts."""
+            if stacked_apply_fn is not None:
+                logits = stacked_apply_fn(params, ex)          # (m, B, C)
+            else:
+                logits = jax.vmap(lambda p: apply_fn(p, ex))(params)
+            hits = (jnp.argmax(logits, axis=-1) == ey[None, :])
+            return jnp.mean(hits.astype(jnp.float32), axis=1)
+
+        def _train(cohort_params, cx, cy):
+            opt_state = jax.vmap(opt.init)(cohort_params)
+            extras = strategy.round_extras(cohort_params, cx, cy)
+            return local_train(strategy.local_loss, opt, cohort_params,
+                               opt_state, cx, cy, extras, local_epochs)
+
+        def _sync_step(arena, cohort_idx, cx, cy, arrived):
+            rows = arena[cohort_idx]                          # (k, N) gather
+            res = _train(layout.unflatten(rows), cx, cy)
+            # PAA over ALL cohort slots (stragglers burn local compute too);
+            # only the aggregation weights honour the arrival mask
+            protos = client_prototypes(embed_fn, res.params, probe)
+            corr = pearson_matrix(protos)
+            labels = spectral_cluster(pearson_affinity(corr), n_clusters,
+                                      kmeans_iters)
+            local_rows = layout.flatten(res.params)
+            residues = fingerprint_rows(bitcast_u32(local_rows))
+            # cluster-masked FedAvg stays per-leaf (same dot shapes as the
+            # legacy driver -> same GEMM blocking -> bit-identical replay at
+            # every cohort size; the flat `cluster_mean_rows` form is the
+            # same math but a (C,k)x(k,N) contraction blocks differently at
+            # k≈100).  The flat form remains the TPU cluster_agg kernel path.
+            new_params = cluster_mean_params(res.params, labels, n_clusters,
+                                             weights=arrived)
+            new_rows = layout.flatten(new_params)
+            # masked scatter-back: arrived slots adopt their cluster mean,
+            # everyone else keeps their previous personalized row
+            upd = jnp.where(arrived[:, None] > 0, new_rows, rows)
+            arena = arena.at[cohort_idx].set(upd)
+            return arena, SyncRoundOut(labels, corr, residues,
+                                       jnp.mean(res.mean_loss), upd)
+
+        def _async_step(base_rows, cx, cy):
+            """FedBuff flush batch: local updates + digests, no aggregation.
+            The merge is gated by chain verification (a host decision) and
+            reuses the same jitted ``weighted_delta_mean`` collective as the
+            legacy driver — it is O(k·N) and sharing the executable keeps
+            replay bit-identical across engine on/off."""
+            res = _train(layout.unflatten(base_rows), cx, cy)
+            local_rows = layout.flatten(res.params)
+            residues = fingerprint_rows(bitcast_u32(local_rows))
+            return local_rows, residues, jnp.mean(res.mean_loss)
+
+        def _eval_cohort(cohort_rows, arrived, labels, ex, ey):
+            """Fixed-shape mask-weighted cohort accuracy (the jnp-generic
+            reference is ``repro.core.fl.masked_global_evaluate``).  Takes
+            the cohort's (k, N) rows — NOT the arena — so a deferred eval
+            never blocks the next round's arena donation."""
+            params = layout.unflatten(cohort_rows)
+            accs = _client_accs(params, ex, ey)
+            w = arrived.astype(jnp.float32)
+            acc = jnp.sum(accs * w) / jnp.maximum(jnp.sum(w), 1.0)
+            onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32) \
+                * w[:, None]
+            sizes = jnp.sum(onehot, axis=0)                   # (C,) arrived
+            cacc = jnp.sum(onehot * accs[:, None], axis=0) \
+                / jnp.maximum(sizes, 1.0)
+            return acc, cacc
+
+        def _eval_global(global_row, ex, ey):
+            return _client_accs(layout.unflatten(global_row[None]), ex, ey)[0]
+
+        def _eval_population(arena, ids, ex, ey):
+            return jnp.mean(_client_accs(layout.unflatten(arena[ids]), ex, ey))
+
+        self.sync_step = jax.jit(_sync_step, donate_argnums=(0,))
+        self.async_step = jax.jit(_async_step)
+        self.eval_cohort = jax.jit(_eval_cohort)
+        self.eval_global = jax.jit(_eval_global)
+        self.eval_population = jax.jit(_eval_population)
+        self._entries = {
+            "sync_step": self.sync_step,
+            "async_step": self.async_step,
+            "eval_cohort": self.eval_cohort,
+            "eval_global": self.eval_global,
+            "eval_population": self.eval_population,
+        }
+
+    # ------------------------------------------------------------------ #
+
+    def cache_sizes(self) -> dict[str, int]:
+        """Compiled-executable count per entry point (jit cache sizes).
+
+        The engine's contract is ONE compile per entry per (mode,
+        cohort_size) — arrival-count variation must never retrace.  The
+        round benchmark and the cache-stability regression test assert on
+        this dict.
+        """
+        return {name: fn._cache_size() for name, fn in self._entries.items()}
+
+    def format_digests(self, residues) -> list[str]:
+        """(k, 2) uint32 residues -> per-client digest strings (host side)."""
+        res = np.asarray(jax.device_get(residues))
+        return [format_digest(row, self.layout.n_params) for row in res]

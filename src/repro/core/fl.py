@@ -81,6 +81,30 @@ def evaluate(
     return jax.vmap(one)(stacked_params, x, y)
 
 
+def masked_global_evaluate(
+    predict_fn: Callable[[Pytree, jax.Array], jax.Array],
+    stacked_params: Pytree,
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Fixed-shape, arrival-masked mean client accuracy.
+
+    ``global_evaluate`` over a dynamically-sized sub-cohort forces one jit
+    recompile per distinct arrival count (the leading dim changes round to
+    round).  Here the cohort shape stays fixed and non-arrived slots are
+    weighted out: returns ``(masked mean accuracy, per-client accuracies)``.
+    """
+
+    def one(params):
+        logits = predict_fn(params, x)
+        return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+    accs = jax.vmap(one)(stacked_params)                       # (m,)
+    w = mask.astype(jnp.float32)
+    return jnp.sum(accs * w) / jnp.maximum(jnp.sum(w), 1.0), accs
+
+
 def global_evaluate(
     predict_fn: Callable[[Pytree, jax.Array], jax.Array],
     stacked_params: Pytree,

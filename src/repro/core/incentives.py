@@ -11,6 +11,7 @@ Properties (property-tested in tests/test_incentives.py):
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -24,6 +25,7 @@ class RewardAllocation(NamedTuple):
     fee: jax.Array              # scalar g = κ / N
 
 
+@partial(jax.jit, static_argnames=("n_clusters", "total_reward", "rho"))
 def allocate_rewards(
     labels: jax.Array,
     n_clusters: int,

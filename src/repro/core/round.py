@@ -146,12 +146,13 @@ class FederatedTrainer:
     def chain_round(
         self,
         round_idx: int,
-        local_params: Pytree,
+        local_params: Pytree | None,
         labels: jax.Array,
         corr: jax.Array,
         cohort: np.ndarray | None = None,
         arrived: np.ndarray | None = None,
         tamper: dict[int, str | Pytree] | None = None,
+        digests: list[str] | None = None,
     ) -> ChainRoundResult:
         """Host-side blockchain protocol (Fig. 1 steps 2/5/6) over one round's
         *cohort* — the clients that actually trained this round.
@@ -169,6 +170,11 @@ class FederatedTrainer:
         Commitments are batched and device-side: ONE jitted fingerprint call
         digests the whole cohort, and the host pulls `O(cohort)` digest bytes
         — never per-client full params (`repro.kernels.fingerprint`).
+
+        ``digests`` (per-slot digest strings) may be precomputed — the fused
+        round engine (`repro.core.engine`) fingerprints the cohort inside its
+        single jitted step, so the protocol here never touches params at all
+        (``local_params`` may then be ``None``).
         """
         assert self.ledger is not None
         k = int(np.asarray(labels).shape[0])
@@ -181,8 +187,9 @@ class FederatedTrainer:
             # nobody delivered an update: no block, the round's pool stays unminted
             return ChainRoundResult(-1, np.zeros(k, bool), np.zeros(k))
 
-        # one fingerprint pass over the cohort-stacked params (slot-indexed)
-        digests = cohort_digests(local_params)
+        if digests is None:
+            # one fingerprint pass over the cohort-stacked params (slot-indexed)
+            digests = cohort_digests(local_params)
 
         # -- Fig.1 step 2: arrived clients commit model digests ------------ #
         entries: list[tuple[int, str]] = []    # what the producer aggregated

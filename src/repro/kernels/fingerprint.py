@@ -49,6 +49,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.runtime.arena import ArenaLayout
+
 Pytree = Any
 
 # Odd base (from MurmurHash3's c1); order mod 2^32 divides 2^30 — weights
@@ -69,19 +71,11 @@ def stack_flatten_u32(stacked_params: Pytree) -> jax.Array:
     """Stacked pytree (leading client axis) -> (m, N) uint32 bit matrix.
 
     Leaves are raveled per client in canonical (path-sorted) order and
-    bitcast so the fingerprint sees exact bit patterns.  Non-32-bit leaves
-    are cast to float32 first (the FL models here are float32 throughout).
+    bitcast so the fingerprint sees exact bit patterns.  Delegates to the
+    shared :class:`repro.runtime.arena.ArenaLayout` so fingerprinting,
+    cluster aggregation and the round engine all use ONE leaf layout.
     """
-    leaves = jax.tree_util.tree_flatten_with_path(stacked_params)[0]
-    leaves = sorted(leaves, key=lambda kv: jax.tree_util.keystr(kv[0]))
-    m = leaves[0][1].shape[0]
-    cols = []
-    for _, leaf in leaves:
-        if leaf.dtype.itemsize != 4:
-            leaf = leaf.astype(jnp.float32)
-        u = jax.lax.bitcast_convert_type(leaf, jnp.uint32)
-        cols.append(u.reshape(m, -1))
-    return jnp.concatenate(cols, axis=1)
+    return ArenaLayout.from_stacked(stacked_params).flatten_u32(stacked_params)
 
 
 def _fingerprint_kernel(x_ref, w_ref, out_ref, *, bn: int):
@@ -137,11 +131,28 @@ def fingerprint_pallas(flat_u32: jax.Array, *, block_m: int = 8,
                      axis=1)
 
 
+def fingerprint_rows(flat_u32: jax.Array, *, use_pallas: bool | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """(m, N) uint32 bit matrix -> (m, 2) residues, jit-safe.
+
+    The arena fast path: the fused round engine bitcasts its (already flat)
+    parameter rows and calls this inside ONE jitted program — no re-stacking,
+    no extra flatten.  ``use_pallas=None`` auto-selects the Mosaic kernel on
+    accelerators and the bit-identical jnp oracle on CPU.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() != "cpu"
+    if use_pallas:
+        return fingerprint_pallas(flat_u32, interpret=interpret)
+    from repro.kernels.ref import fingerprint_ref
+    return fingerprint_ref(flat_u32,
+                           jnp.asarray(poly_weights(flat_u32.shape[1])))
+
+
 @jax.jit
 def _digest_pipeline(stacked_params: Pytree) -> jax.Array:
     flat = stack_flatten_u32(stacked_params)
-    from repro.kernels.ref import fingerprint_ref
-    return fingerprint_ref(flat, jnp.asarray(poly_weights(flat.shape[1])))
+    return fingerprint_rows(flat, use_pallas=False)
 
 
 def format_digest(residues, n_params: int) -> str:

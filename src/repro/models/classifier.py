@@ -52,6 +52,38 @@ def apply(cfg: MLPConfig, params: Pytree, x: jax.Array) -> jax.Array:
     return embed(cfg, params, x) @ params["w_head"] + params["b_head"]
 
 
+def embed_stacked(cfg: MLPConfig, stacked_params: Pytree, x: jax.Array) -> jax.Array:
+    """All clients' representations on ONE shared probe/eval batch.
+
+    ``vmap(embed)`` broadcasts the shared ``x`` into a batched dot whose lhs
+    batch dim XLA CPU lowers poorly (~2.5× slower at 100-client cohorts).
+    Here the first layer is a single width-concatenated GEMM over all
+    clients (the shared batch stays the lhs); subsequent layers have
+    per-client inputs, where the batched matmul lowers well.
+
+    (B, in_dim) × stacked params -> (m, B, rep_dim).  Same math as
+    ``jax.vmap(embed)`` up to float summation order.
+    """
+    n_hidden = len(cfg.hidden) + 1
+    w0 = stacked_params["w0"]                       # (m, d0, d1)
+    m, d0, d1 = w0.shape
+    h = x @ jnp.transpose(w0, (1, 0, 2)).reshape(d0, m * d1)
+    h = h.reshape(x.shape[0], m, d1).transpose(1, 0, 2)
+    h = h + stacked_params["b0"][:, None, :]
+    for i in range(1, n_hidden):
+        h = jax.nn.relu(h)                          # activation between layers
+        h = jnp.einsum("mbi,mij->mbj", h, stacked_params[f"w{i}"])
+        h = h + stacked_params[f"b{i}"][:, None, :]
+    return jnp.tanh(h)
+
+
+def apply_stacked(cfg: MLPConfig, stacked_params: Pytree, x: jax.Array) -> jax.Array:
+    """All clients' logits on one shared batch: (m, B, num_classes)."""
+    reps = embed_stacked(cfg, stacked_params, x)
+    logits = jnp.einsum("mbi,mij->mbj", reps, stacked_params["w_head"])
+    return logits + stacked_params["b_head"][:, None, :]
+
+
 def init_stacked(cfg: MLPConfig, key: jax.Array, n_clients: int,
                  same_init: bool = True) -> Pytree:
     """Stacked client params.  FL convention: all clients start from the same

@@ -1,0 +1,2 @@
+"""Runtime substrate shared across core/kernels/sim: the parameter arena."""
+from repro.runtime.arena import ArenaLayout, ParamArena, bitcast_u32  # noqa: F401

@@ -6,8 +6,10 @@ freeriders) on top of the existing BFLN machinery.  Per synchronous round:
     1. availability draw → online pool → sampler picks the cohort,
     2. cohort events scheduled on the virtual clock (arrival, update-ready
        after per-client latency, dropout), block slot closes the round,
-    3. the arrived sub-cohort trains + PAA-aggregates in ONE jitted program
-       (arrival mask = aggregation weights on ``cluster_mean_params``),
+    3. ONE fused, buffer-donated jitted step (`repro.core.engine`): arena
+       gather → local training → PAA (arrival mask = aggregation weights) →
+       cohort fingerprint digests → masked scatter-back into the donated
+       parameter arena (`repro.runtime.arena`),
     4. `FederatedTrainer.chain_round` runs the full blockchain protocol over
        the cohort — hash commits, CACC packing queue, block, verification,
        participation-aware reward settlement on the population-wide ledger.
@@ -18,9 +20,14 @@ buffer up, and each buffer flush = one block + one staleness-weighted merge
 (merge weights are *gated by chain verification*, so tampered updates carry
 zero weight and zero reward).
 
+``SimConfig.engine=False`` preserves the pre-arena driver — eager per-leaf
+gathers/scatters and shape-polymorphic eval — as the bit-identical oracle
+for the engine (`tests/test_engine.py`) and the baseline for
+``benchmarks/round_bench.py``.
+
 Everything is driven by seeded numpy generators and a deterministic event
 queue: two runs with the same config produce identical event logs, block
-hashes, ledger balances and final parameters.
+hashes, ledger balances and final parameters — with the engine on or off.
 
 Modeling notes: cohort members that miss the deadline still burn local
 compute (their training is simulated) but their params never reach the
@@ -42,11 +49,18 @@ import numpy as np
 from repro.blockchain import TokenLedger
 from repro.core import FederatedTrainer, ModelBundle, digest_of, make_bfln
 from repro.core.aggregation import paa_round
+from repro.core.engine import RoundEngine
 from repro.core.fl import global_evaluate, local_train
 from repro.models import classifier as clf
 from repro.optim import adam
+from repro.runtime.arena import ParamArena
 from repro.sim import events as ev
-from repro.sim.async_agg import BufferedAggregator, BufferedUpdate
+from repro.sim.async_agg import (
+    BufferedAggregator,
+    BufferedUpdate,
+    staleness_weight,
+    weighted_delta_mean,
+)
 from repro.sim.clock import VirtualClock
 from repro.sim.events import EventQueue
 from repro.sim.population import ClientPopulation
@@ -78,6 +92,7 @@ class SimConfig:
     eval_examples: int = 1024         # shared-test sub-sample for evaluation
     hidden: tuple[int, ...] = (64,)
     rep_dim: int = 32
+    engine: bool = True               # arena-backed fused round engine
     seed: int = 0
 
 
@@ -98,6 +113,7 @@ class SimRoundRecord:
     mean_loss: float
     accuracy: float = float("nan")    # cohort accuracy (sync) / global (async)
     staleness_mean: float = 0.0       # async only
+    cluster_accuracy: np.ndarray | None = None   # (C,) engine-mode sync eval
 
 
 @dataclass
@@ -146,6 +162,8 @@ class SimulatedFederation:
         # population-wide ledger (the trainer's chain_round settles against it)
         self.trainer.ledger = TokenLedger(n, config.initial_stake)
 
+        self.arena: ParamArena | None = None
+        self.engine: RoundEngine | None = None
         self.params = clf.init_stacked(mcfg, jax.random.PRNGKey(config.seed), n)
         # shared tamper digest for Byzantine commits (built once; chain_round
         # substitutes the digest each freerider *claims*, which never varies)
@@ -166,6 +184,19 @@ class SimulatedFederation:
         probe = population.probe
         n_clusters = config.n_clusters
         epochs = config.local_epochs
+
+        if config.engine:
+            # flatten the population ONCE into the (n, N) arena; all round
+            # state now lives as donated rows of this matrix
+            self.arena = ParamArena.from_stacked(self._params)
+            self._params = None
+            self.engine = RoundEngine(
+                self.arena.layout, apply_fn=self.bundle.apply_fn,
+                embed_fn=embed_fn, strategy=strategy, opt=opt, probe=probe,
+                n_clusters=n_clusters, local_epochs=epochs,
+                stacked_apply_fn=functools.partial(clf.apply_stacked, mcfg))
+
+        # ------- legacy (pre-arena) jitted programs, kept as the oracle ---- #
 
         @jax.jit
         def _cohort_round(cohort_params, cx, cy, arrived_w):
@@ -194,6 +225,28 @@ class SimulatedFederation:
         self._local_only = _local_only
         self._eval = jax.jit(functools.partial(global_evaluate,
                                                self.bundle.apply_fn))
+        # the final population eval has its own jitted entry: its leading dim
+        # (eval_clients) differs from the round cohort's, and sharing one
+        # cache entry per distinct shape made compile counts unauditable
+        self._eval_final = jax.jit(functools.partial(global_evaluate,
+                                                     self.bundle.apply_fn))
+
+    # ------------------------------------------------------------------ #
+    # stacked-params view (legacy attribute; engine mode stores the arena)
+    # ------------------------------------------------------------------ #
+
+    @property
+    def params(self) -> Pytree:
+        if self.arena is not None:
+            return self.arena.as_pytree()
+        return self._params
+
+    @params.setter
+    def params(self, value: Pytree) -> None:
+        if self.arena is not None:
+            self.arena.data = self.arena.layout.flatten(value)
+        else:
+            self._params = value
 
     # ------------------------------------------------------------------ #
     # shared helpers
@@ -213,12 +266,17 @@ class SimulatedFederation:
                 for slot, gid in enumerate(cohort)
                 if arrived[slot] and self.pop.byzantine[gid]}
 
+    def _eval_slices(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        return (self.pop.test_x[: self.cfg.eval_examples],
+                self.pop.test_y[: self.cfg.eval_examples])
+
     def _evaluate_clients(self, ids: np.ndarray) -> float:
-        sub = jnp.asarray(ids)
-        ex = self.pop.test_x[: self.cfg.eval_examples]
-        ey = self.pop.test_y[: self.cfg.eval_examples]
-        stacked = jax.tree.map(lambda x: x[sub], self.params)
-        return float(self._eval(stacked, ex, ey))
+        ex, ey = self._eval_slices()
+        if self.engine is not None:
+            return float(self.engine.eval_population(
+                self.arena.data, jnp.asarray(ids), ex, ey))
+        stacked = jax.tree.map(lambda x: x[jnp.asarray(ids)], self._params)
+        return float(self._eval_final(stacked, ex, ey))
 
     # ------------------------------------------------------------------ #
     # synchronous mode
@@ -270,26 +328,42 @@ class SimulatedFederation:
         if not arrived.any():
             return record                     # empty round: no block minted
 
-        cohort_params = jax.tree.map(lambda x: x[jnp.asarray(cohort)],
-                                     self.params)
         cx, cy = pop.cohort_data(cohort)
-        local_params, paa, mean_loss = self._cohort_round(
-            cohort_params, cx, cy, jnp.asarray(arrived, jnp.float32))
+        arrived_w = jnp.asarray(arrived, jnp.float32)
 
-        cres = self.trainer.chain_round(
-            r, local_params, paa.labels, paa.corr, cohort=cohort,
-            arrived=arrived, tamper=self._tampers(cohort, arrived))
+        if self.engine is not None:
+            # ONE donated device program: gather → train → PAA → digests →
+            # masked scatter-back; the host sees only O(cohort) bytes
+            cohort_idx = jnp.asarray(cohort)
+            self.arena.data, out = self.engine.sync_step(
+                self.arena.data, cohort_idx, cx, cy, arrived_w)
+            labels_dev, mean_loss = out.labels, out.mean_loss
+            cres = self.trainer.chain_round(
+                r, None, labels_dev, out.corr, cohort=cohort, arrived=arrived,
+                tamper=self._tampers(cohort, arrived),
+                digests=self.engine.format_digests(out.residues))
+        else:
+            cohort_params = jax.tree.map(lambda x: x[jnp.asarray(cohort)],
+                                         self._params)
+            local_params, paa, mean_loss = self._cohort_round(
+                cohort_params, cx, cy, arrived_w)
+            labels_dev = paa.labels
+            cres = self.trainer.chain_round(
+                r, local_params, paa.labels, paa.corr, cohort=cohort,
+                arrived=arrived, tamper=self._tampers(cohort, arrived))
 
-        # arrived clients adopt their cluster-aggregated model; stragglers
-        # and dropouts keep their previous personalized params
+            # arrived clients adopt their cluster-aggregated model; stragglers
+            # and dropouts keep their previous personalized params
+            new_rows = jax.tree.map(
+                lambda x: x[jnp.asarray(np.flatnonzero(arrived))],
+                paa.new_stacked_params)
+            upd_ids = jnp.asarray(np.asarray(cohort)[arrived])
+            self._params = jax.tree.map(
+                lambda P, rows: P.at[upd_ids].set(rows),
+                self._params, new_rows)
+
         upd = np.asarray(cohort)[arrived]
-        new_rows = jax.tree.map(lambda x: x[jnp.asarray(np.flatnonzero(arrived))],
-                                paa.new_stacked_params)
-        self.params = jax.tree.map(
-            lambda P, rows: P.at[jnp.asarray(upd)].set(rows),
-            self.params, new_rows)
-
-        labels = np.asarray(paa.labels)
+        labels = np.asarray(labels_dev)
         self.last_labels[upd] = labels[arrived]
 
         record.producer = cres.producer
@@ -298,11 +372,24 @@ class SimulatedFederation:
         record.reward_burned = float(cfg.total_reward - cres.rewards.sum())
         record.mean_loss = float(mean_loss)
         if cfg.eval_every and ((r + 1) % cfg.eval_every == 0):
-            ex = self.pop.test_x[: cfg.eval_examples]
-            ey = self.pop.test_y[: cfg.eval_examples]
-            # evaluate only the adopted (arrived) rows: stragglers keep their
-            # old params, and a cluster with zero arrivals yields a garbage row
-            record.accuracy = float(self._eval(new_rows, ex, ey))
+            ex, ey = self._eval_slices()
+            if self.engine is not None:
+                # fixed-shape mask-weighted eval: the cohort shape never
+                # changes, so this entry compiles exactly once.  The outputs
+                # stay on device — metrics never gate the round, so the eval
+                # overlaps the next round's host work (`_finalize_history`
+                # materialises them at end of run)
+                acc, cacc = self.engine.eval_cohort(
+                    out.new_rows, arrived_w, labels_dev, ex, ey)
+                record.accuracy = acc
+                record.cluster_accuracy = cacc
+            else:
+                # evaluate only the adopted (arrived) rows: stragglers keep
+                # their old params, and a cluster with zero arrivals yields a
+                # garbage row.  new_rows' leading dim varies with the arrival
+                # count → one jit recompile per distinct count (the engine
+                # path exists to kill exactly this).
+                record.accuracy = float(self._eval(new_rows, ex, ey))
         return record
 
     # ------------------------------------------------------------------ #
@@ -319,8 +406,11 @@ class SimulatedFederation:
                 f"({cfg.concurrency}) exceeds the population "
                 f"({pop.n_clients}); the buffer could never fill")
         version = 0
-        global_params = tree_index(self.params, 0)
-        snapshots: dict[int, Pytree] = {0: global_params}
+        if self.arena is not None:
+            global_state = self.arena.data[0]          # (N,) flat row
+        else:
+            global_state = tree_index(self._params, 0)
+        snapshots: dict[int, Any] = {0: global_state}
         inflight: dict[int, int] = {}          # client -> dispatch version
         agg = BufferedAggregator(cfg.buffer_size, cfg.staleness_alpha)
 
@@ -366,9 +456,9 @@ class SimulatedFederation:
                 continue
             agg.add(BufferedUpdate(e.client, None, dispatched_v))
             if len(agg) >= cfg.buffer_size:
-                version, global_params = self._async_flush(
-                    agg, version, global_params, snapshots)
-                snapshots[version] = global_params
+                version, global_state = self._async_flush(
+                    agg, version, global_state, snapshots)
+                snapshots[version] = global_state
                 live = set(inflight.values()) | {version}
                 for v in [v for v in snapshots if v not in live]:
                     del snapshots[v]
@@ -379,41 +469,69 @@ class SimulatedFederation:
             # report simply carries fewer flushes than requested
             self.event_log.append((self.clock.now, "queue_drained", -1,
                                    version, 0))
-        self.params = jax.tree.map(
-            lambda g: jnp.broadcast_to(g[None], (pop.n_clients,) + g.shape),
-            global_params)
+        if self.arena is not None:
+            self.arena.data = jnp.broadcast_to(
+                global_state[None], self.arena.data.shape)
+        else:
+            self._params = jax.tree.map(
+                lambda g: jnp.broadcast_to(g[None], (pop.n_clients,) + g.shape),
+                global_state)
 
     def _async_flush(self, agg: BufferedAggregator, version: int,
-                     global_params: Pytree, snapshots: dict) -> tuple:
+                     global_state, snapshots: dict) -> tuple:
         """One buffer flush = one training batch + one block + one merge."""
         cfg, pop = self.cfg, self.pop
         clients = np.array([u.client for u in agg.buffer], dtype=np.int64)
         versions = [u.version for u in agg.buffer]
         k = len(clients)
-
-        base = tree_stack([snapshots[v] for v in versions])
         cx, cy = pop.cohort_data(clients)
-        local_params, mean_loss = self._local_only(base, cx, cy)
-        deltas = jax.tree.map(lambda a, b: a - b, local_params, base)
-        # re-materialise the buffer with the actual deltas (kept lazy until
-        # now so every flush trains its K clients in one vmapped call)
-        agg.buffer = [BufferedUpdate(int(c), tree_index(deltas, i), v)
-                      for i, (c, v) in enumerate(zip(clients, versions))]
 
         # chain: single-cluster CACC over the flush group
         labels = jnp.zeros((k,), jnp.int32)
         corr = jnp.eye(k, dtype=jnp.float32)
         arrived = np.ones(k, dtype=bool)
-        cres = self.trainer.chain_round(
-            version, local_params, labels, corr, cohort=clients,
-            arrived=arrived, tamper=self._tampers(clients, arrived))
+        tamper = self._tampers(clients, arrived)
 
-        merge = agg.flush(version, gate=cres.verified.astype(np.float32))
-        global_params = jax.tree.map(
-            lambda g, d: g + cfg.server_lr * d.astype(g.dtype),
-            global_params, merge.delta)
+        if self.engine is not None:
+            layout = self.arena.layout
+            base_rows = jnp.stack([snapshots[v] for v in versions])  # (k, N)
+            local_rows, residues, mean_loss = self.engine.async_step(
+                base_rows, cx, cy)
+            cres = self.trainer.chain_round(
+                version, None, labels, corr, cohort=clients, arrived=arrived,
+                tamper=tamper, digests=self.engine.format_digests(residues))
+            staleness = np.array([version - v for v in versions], np.int64)
+            w = np.asarray(staleness_weight(staleness, cfg.staleness_alpha),
+                           np.float32) * cres.verified.astype(np.float32)
+            # merge through the SAME jitted collective as the legacy path
+            # (same leaf shapes -> same executable -> bit-identical replay);
+            # the unflatten/flatten round-trips are exact reshapes
+            deltas = layout.unflatten(local_rows - base_rows)
+            merged = weighted_delta_mean(deltas, jnp.asarray(w))
+            merged_row = layout.flatten(
+                jax.tree.map(lambda x: x[None], merged))[0]
+            global_state = global_state + cfg.server_lr * merged_row
+            agg.buffer = []
+            staleness_mean = float(staleness.mean())
+        else:
+            base = tree_stack([snapshots[v] for v in versions])
+            local_params, mean_loss = self._local_only(base, cx, cy)
+            deltas = jax.tree.map(lambda a, b: a - b, local_params, base)
+            # re-materialise the buffer with the actual deltas (kept lazy
+            # until now so every flush trains its K clients in one vmapped
+            # call)
+            agg.buffer = [BufferedUpdate(int(c), tree_index(deltas, i), v)
+                          for i, (c, v) in enumerate(zip(clients, versions))]
+            cres = self.trainer.chain_round(
+                version, local_params, labels, corr, cohort=clients,
+                arrived=arrived, tamper=tamper)
+            merge = agg.flush(version, gate=cres.verified.astype(np.float32))
+            global_state = jax.tree.map(
+                lambda g, d: g + cfg.server_lr * d.astype(g.dtype),
+                global_state, merge.delta)
+            staleness_mean = float(merge.staleness.mean())
+
         new_version = version + 1
-
         self.last_labels[clients] = 0
         record = SimRoundRecord(
             round_idx=version, t_open=self.clock.now, t_close=self.clock.now,
@@ -424,16 +542,29 @@ class SimulatedFederation:
             reward_paid=float(cres.rewards.sum()),
             reward_burned=float(cfg.total_reward - cres.rewards.sum()),
             mean_loss=float(mean_loss),
-            staleness_mean=float(merge.staleness.mean()))
+            staleness_mean=staleness_mean)
         if cfg.eval_every and (new_version % cfg.eval_every == 0):
-            stacked = jax.tree.map(lambda g: g[None], global_params)
-            ex = pop.test_x[: cfg.eval_examples]
-            ey = pop.test_y[: cfg.eval_examples]
-            record.accuracy = float(self._eval(stacked, ex, ey))
+            ex, ey = self._eval_slices()
+            if self.engine is not None:
+                # deferred like the sync eval: materialised at end of run
+                record.accuracy = self.engine.eval_global(global_state, ex, ey)
+            else:
+                stacked = jax.tree.map(lambda g: g[None], global_state)
+                record.accuracy = float(self._eval(stacked, ex, ey))
         self.history.append(record)
-        return new_version, global_params
+        return new_version, global_state
 
     # ------------------------------------------------------------------ #
+
+    def _finalize_history(self) -> None:
+        """Materialise deferred (still-on-device) eval metrics.  The engine
+        path leaves accuracy outputs as device arrays so metric extraction
+        never blocks the round hot path."""
+        for rec in self.history:
+            if not isinstance(rec.accuracy, float):
+                rec.accuracy = float(rec.accuracy)
+            if rec.cluster_accuracy is not None:
+                rec.cluster_accuracy = np.asarray(rec.cluster_accuracy)
 
     def run(self) -> SimReport:
         cfg = self.cfg
@@ -444,6 +575,7 @@ class SimulatedFederation:
             self._run_async()
         else:
             raise ValueError(f"unknown mode {cfg.mode!r}")
+        self._finalize_history()
 
         n_eval = min(cfg.eval_clients, self.pop.n_clients)
         eval_ids = np.linspace(0, self.pop.n_clients - 1, n_eval).astype(int)

@@ -1,0 +1,123 @@
+"""Parameter arena: exact flatten/unflatten round-trips, canonical layout
+parity with the fingerprint path, masked scatter semantics, and bit-identity
+of arena-routed cluster aggregation against the kernels/ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import cluster_mean_params, cluster_mean_rows
+from repro.kernels import ops
+from repro.kernels.fingerprint import (
+    cohort_digests,
+    fingerprint_rows,
+    format_digest,
+    poly_weights,
+    stack_flatten_u32,
+)
+from repro.kernels.cluster_agg import mixing_matrix
+from repro.kernels.ref import cluster_agg_ref, fingerprint_ref
+from repro.runtime.arena import ArenaLayout, ParamArena, bitcast_u32
+from repro.utils.tree import tree_stack
+
+
+def _stacked(m=6, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), m)
+    return tree_stack([
+        {"w0": jax.random.normal(k, (5, 3)),
+         "nested": {"b": jax.random.normal(k, (4,)),
+                    "w10": jax.random.normal(k, (2, 2, 2))},
+         "b_head": jax.random.normal(k, (7,))} for k in ks])
+
+
+def test_flatten_unflatten_roundtrip_exact():
+    sp = _stacked()
+    layout = ArenaLayout.from_stacked(sp)
+    flat = layout.flatten(sp)
+    assert flat.shape == (6, layout.n_params)
+    back = layout.unflatten(flat)
+    assert jax.tree.structure(back) == jax.tree.structure(sp)
+    for a, b in zip(jax.tree.leaves(sp), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype and a.shape == b.shape
+
+
+def test_layout_order_matches_fingerprint_flatten():
+    """The arena's canonical (path-sorted) order IS the fingerprint order:
+    bitcast arena rows == stack_flatten_u32, for any dict insertion order."""
+    a = jnp.asarray([[1.5, -2.25]])
+    b = jnp.asarray([[3.0]])
+    for tree in ({"x": a, "y": b}, {"y": b, "x": a}):
+        layout = ArenaLayout.from_stacked(tree)
+        np.testing.assert_array_equal(
+            np.asarray(bitcast_u32(layout.flatten(tree))),
+            np.asarray(stack_flatten_u32(tree)))
+        np.testing.assert_array_equal(
+            np.asarray(layout.flatten_u32(tree)),
+            np.asarray(stack_flatten_u32(tree)))
+
+
+def test_arena_digests_bit_identical_to_pre_arena_oracle():
+    """Digesting arena rows == the pre-arena cohort_digests pipeline."""
+    sp = _stacked(m=5, seed=3)
+    arena = ParamArena.from_stacked(sp)
+    res = fingerprint_rows(bitcast_u32(arena.data), use_pallas=False)
+    got = [format_digest(r, arena.n_params) for r in np.asarray(res)]
+    assert got == cohort_digests(sp)
+    # and against the raw ref oracle on the independent flattening
+    flat = stack_flatten_u32(sp)
+    ref = fingerprint_ref(flat, jnp.asarray(poly_weights(flat.shape[1])))
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(ref))
+
+
+def test_gather_masked_scatter_semantics():
+    sp = _stacked(m=8, seed=1)
+    arena = ParamArena.from_stacked(sp)
+    before = np.asarray(arena.data).copy()
+    cohort = np.array([1, 4, 6])
+    mask = np.array([True, False, True])
+    rows = jnp.ones((3, arena.n_params), jnp.float32) * 42.0
+    arena.masked_scatter(cohort, mask, rows)
+    after = np.asarray(arena.data)
+    np.testing.assert_array_equal(after[1], 42.0)      # arrived: adopted
+    np.testing.assert_array_equal(after[6], 42.0)
+    np.testing.assert_array_equal(after[4], before[4])  # masked out: kept
+    untouched = np.setdiff1d(np.arange(8), cohort)
+    np.testing.assert_array_equal(after[untouched], before[untouched])
+    np.testing.assert_array_equal(np.asarray(arena.gather([1, 4])),
+                                  after[[1, 4]])
+
+
+def test_row_pytree_matches_tree_index():
+    sp = _stacked(m=4, seed=2)
+    arena = ParamArena.from_stacked(sp)
+    row = arena.row_pytree(2)
+    for a, b in zip(jax.tree.leaves(row),
+                    jax.tree.leaves(jax.tree.map(lambda x: x[2], sp))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cluster_mean_rows_bit_identical_to_tree_two_step():
+    """Flat-row aggregation == the per-leaf two_step collective, bit for bit
+    at this size (same sums; very large cohorts may block the contraction
+    differently, which is why the engine keeps the per-leaf form)."""
+    sp = _stacked(m=9, seed=5)
+    layout = ArenaLayout.from_stacked(sp)
+    labels = jnp.asarray([0, 1, 2, 0, 1, 2, 0, 0, 1])
+    w = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1, 1], jnp.float32)
+    flat_out = cluster_mean_rows(layout.flatten(sp), labels, 3, weights=w)
+    tree_out = cluster_mean_params(sp, labels, 3, weights=w, method="two_step")
+    np.testing.assert_array_equal(
+        np.asarray(flat_out).view(np.uint32),
+        np.asarray(layout.flatten(tree_out)).view(np.uint32))
+
+
+def test_cluster_agg_kernel_via_layout_matches_ref_oracle():
+    """Routing the Pallas cluster-agg kernel through the arena layout is
+    bit-identical to the pre-arena cluster_agg_ref oracle."""
+    sp = _stacked(m=7, seed=6)
+    layout = ArenaLayout.from_stacked(sp)
+    flat = layout.flatten(sp)
+    labels = jnp.asarray([0, 0, 1, 2, 1, 2, 0])
+    got = ops.cluster_aggregate(flat, labels, 3)
+    ref = cluster_agg_ref(flat, mixing_matrix(labels, 3))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
