@@ -20,11 +20,24 @@ metric batch only adds identical GEMM time to both paths, drowning the
 round being measured.  A heavy-eval variant (the SimConfig default 1024
 examples) is measured and reported alongside.
 
-Also asserts the two paths replay identically (block hashes + balances) and
+A third variant — ``mesh_shards=8`` — runs the SAME fused engine with the
+parameter arena row-sharded over an 8-device client mesh
+(`repro.runtime.arena.ShardedParamArena`): per-device population state drops
+to n/8 rows while replay stays bit-identical (asserted).  The sharded run
+executes in a SUBPROCESS that self-forces
+``--xla_force_host_platform_device_count`` — forcing the device count in the
+main process would split the CPU thread pool and skew the legacy/engine
+timings this file has tracked since PR 3.  The cross-process block-hash /
+balance comparison therefore doubles as a replay gate across device
+topologies.  The sharded latency column measures the replicated-cohort
+overhead on a forced CPU mesh (8 logical devices on one physical CPU);
+``per_device_arena_bytes`` is the scaling headline.
+
+Also asserts the paths replay identically (block hashes + balances) and
 that the engine compiled each used entry exactly once, then emits
 ``BENCH_round.json`` (steady-state round ms, compile counts, peak host
-bytes, per-round population realloc) so the perf trajectory is tracked PR
-over PR.
+bytes, per-round population realloc, per-device arena bytes) so the perf
+trajectory is tracked PR over PR.
 
 Prints ``round,<name>,<us_per_round>,<derived>`` CSV like the other benches.
 """
@@ -32,8 +45,23 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 import tracemalloc
+
+if __name__ == "__main__":
+    # sharded worker mode: needs the multi-device CPU platform, and XLA_FLAGS
+    # must be set before jax initialises (the repro.sim import below) —
+    # pre-parse the shard count and re-exec once with the forced device count
+    _pre = argparse.ArgumentParser(add_help=False)
+    _pre.add_argument("--mesh-shards", type=int, default=8)
+    _pre.add_argument("--sharded-only", default=None)
+    _ns = _pre.parse_known_args()[0]
+    if _ns.sharded_only is not None:
+        from repro.launch.bootstrap import force_host_device_count
+        force_host_device_count(_ns.mesh_shards)
 
 import numpy as np
 
@@ -44,7 +72,7 @@ WARMUP = 3            # rounds excluded from the steady-state mean (compiles)
 
 
 def _build(engine: bool, n_clients: int, sample_frac: float, rounds: int,
-           eval_examples: int) -> SimulatedFederation:
+           eval_examples: int, mesh_shards: int = 1) -> SimulatedFederation:
     # fresh population per driver: LatencyModel draws advance an internal rng,
     # so sharing one instance would desynchronise the second run
     spec = PopulationSpec(n_clients=n_clients, straggler_frac=0.1,
@@ -52,7 +80,7 @@ def _build(engine: bool, n_clients: int, sample_frac: float, rounds: int,
     pop = ClientPopulation.from_spec(spec)
     cfg = SimConfig(rounds=rounds, sample_frac=sample_frac, n_clusters=5,
                     eval_every=1, eval_examples=eval_examples, seed=0,
-                    engine=engine)
+                    engine=engine, mesh_shards=mesh_shards)
     return SimulatedFederation(pop, cfg)
 
 
@@ -64,9 +92,18 @@ def _compile_counts(sim: SimulatedFederation) -> dict[str, int]:
             "_eval_final": sim._eval_final._cache_size()}
 
 
+def _arena_ptrs(sim: SimulatedFederation) -> list[int]:
+    """Per-shard device buffer pointers (1 entry when unsharded)."""
+    if sim.cfg.mesh_shards > 1:
+        return [s.data.unsafe_buffer_pointer()
+                for s in sim.arena.data.addressable_shards]
+    return [sim.arena.data.unsafe_buffer_pointer()]
+
+
 def _run(engine: bool, n_clients: int, sample_frac: float, rounds: int,
-         eval_examples: int) -> dict:
-    sim = _build(engine, n_clients, sample_frac, rounds, eval_examples)
+         eval_examples: int, mesh_shards: int = 1) -> dict:
+    sim = _build(engine, n_clients, sample_frac, rounds, eval_examples,
+                 mesh_shards)
     times_ms = []
     for r in range(rounds):
         t0 = time.perf_counter()
@@ -77,10 +114,10 @@ def _run(engine: bool, n_clients: int, sample_frac: float, rounds: int,
     # population-allocation metric: the engine donates the arena (in-place
     # update, 0 bytes); the legacy scatter rebuilds the full stacked pytree
     if engine:
-        ptr = sim.arena.data.unsafe_buffer_pointer()
+        ptrs = _arena_ptrs(sim)
         realloc = 0
     else:
-        ptr = None
+        ptrs = None
         realloc = tree_bytes(sim.params)
     # separate phase: tracemalloc slows every Python allocation, so host-byte
     # accounting runs over extra (untimed) steady-state rounds
@@ -91,12 +128,12 @@ def _run(engine: bool, n_clients: int, sample_frac: float, rounds: int,
     _, peak_host = tracemalloc.get_traced_memory()
     tracemalloc.stop()
     if engine:
-        assert sim.arena.data.unsafe_buffer_pointer() == ptr, \
+        assert _arena_ptrs(sim) == ptrs, \
             "arena buffer was reallocated (donation regressed)"
 
     steady = times_ms[WARMUP:] or times_ms
     counts = sorted({int(rec.arrived.sum()) for rec in sim.history})
-    return {
+    out = {
         "engine": engine,
         "rounds": rounds,
         "first_round_ms": round(times_ms[0], 2),
@@ -109,10 +146,38 @@ def _run(engine: bool, n_clients: int, sample_frac: float, rounds: int,
         "block_hashes": [b.block_hash() for b in sim.trainer.chain.blocks],
         "balances": sim.trainer.ledger.balances,
     }
+    if mesh_shards > 1:
+        out["mesh_shards"] = mesh_shards
+        out["per_device_arena_bytes"] = sim.arena.per_device_bytes()
+        out["arena_total_bytes"] = int(sim.arena.data.nbytes)
+    elif engine:
+        out["per_device_arena_bytes"] = int(sim.arena.data.nbytes)
+    return out
+
+
+def _sharded_run(n_clients: int, sample_frac: float, rounds: int,
+                 eval_examples: int, mesh_shards: int) -> dict:
+    """The mesh-sharded engine run — in-process when enough devices already
+    exist, otherwise via a ``--sharded-only`` subprocess that self-forces the
+    CPU device count (keeping THIS process single-device so the legacy and
+    engine timings stay comparable with the pre-mesh trajectory)."""
+    import jax
+    if mesh_shards <= len(jax.devices()):
+        return _run(True, n_clients, sample_frac, rounds, eval_examples,
+                    mesh_shards)
+    payload = json.dumps({"n_clients": n_clients, "sample_frac": sample_frac,
+                          "rounds": rounds, "eval_examples": eval_examples})
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded-only", payload,
+         "--mesh-shards", str(mesh_shards)],
+        capture_output=True, text=True, env=dict(os.environ), timeout=7200)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded worker failed:\n{out.stderr[-4000:]}")
+    return json.loads(out.stdout.splitlines()[-1])
 
 
 def _case(n_clients: int, sample_frac: float, rounds: int,
-          eval_examples: int) -> dict:
+          eval_examples: int, mesh_shards: int = 1) -> dict:
     legacy = _run(False, n_clients, sample_frac, rounds, eval_examples)
     engine = _run(True, n_clients, sample_frac, rounds, eval_examples)
 
@@ -127,7 +192,7 @@ def _case(n_clients: int, sample_frac: float, rounds: int,
         "benchmark population produced constant arrival counts"
 
     drop = ("block_hashes", "balances", "engine", "rounds")
-    return {
+    case = {
         "eval_examples": eval_examples,
         "distinct_arrival_counts": engine["distinct_arrival_counts"],
         "legacy": {k: v for k, v in legacy.items() if k not in drop},
@@ -135,37 +200,70 @@ def _case(n_clients: int, sample_frac: float, rounds: int,
         "steady_speedup": round(legacy["steady_ms"] / engine["steady_ms"], 2),
         "replay_identical": True,
     }
+    if mesh_shards > 1:
+        sharded = _sharded_run(n_clients, sample_frac, rounds, eval_examples,
+                               mesh_shards)
+        # the sharded engine must replay bit-identically to both others
+        assert sharded["block_hashes"] == engine["block_hashes"], \
+            "sharded replay diverged from the single-device engine"
+        assert np.array_equal(np.asarray(sharded["balances"]),
+                              np.asarray(engine["balances"]))
+        used = {k: v for k, v in sharded["compile_counts"].items() if v}
+        assert all(v == 1 for v in used.values()), \
+            f"sharded entry recompiled: {sharded['compile_counts']}"
+        case["sharded"] = {k: v for k, v in sharded.items() if k not in drop}
+        case["sharded_round_overhead"] = round(
+            sharded["steady_ms"] / engine["steady_ms"], 2)
+        case["arena_bytes_per_device_reduction"] = round(
+            engine["per_device_arena_bytes"]
+            / sharded["per_device_arena_bytes"], 2)
+    return case
 
 
 def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
-         out: str = "BENCH_round.json", heavy_eval: bool = True) -> dict:
-    cases = {"headline_eval256": _case(n_clients, sample_frac, rounds, 256)}
+         out: str = "BENCH_round.json", heavy_eval: bool = True,
+         mesh_shards: int = 8) -> dict:
+    cases = {"headline_eval256": _case(n_clients, sample_frac, rounds, 256,
+                                       mesh_shards)}
     if heavy_eval:
-        cases["heavy_eval1024"] = _case(n_clients, sample_frac, rounds, 1024)
+        cases["heavy_eval1024"] = _case(n_clients, sample_frac, rounds, 1024,
+                                        mesh_shards)
 
     result = {
         "bench": "round",
         "n_clients": n_clients,
         "cohort": max(1, int(round(sample_frac * n_clients))),
         "rounds": rounds,
+        "mesh_shards": mesh_shards,
         **cases,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
 
     for cname, case in cases.items():
-        for side in ("legacy", "engine"):
-            row = case[side]
+        for side in ("legacy", "engine", "sharded"):
+            row = case.get(side)
+            if row is None:
+                continue
             print(f"round,{cname}_{side},{row['steady_ms'] * 1e3:.0f},"
                   f"n={n_clients} cohort={result['cohort']} rounds={rounds} "
                   f"first_ms={row['first_round_ms']} "
                   f"compiles={sum(row['compile_counts'].values())} "
                   f"realloc_mb_per_round="
-                  f"{row['population_realloc_bytes_per_round'] / 1e6:.1f}")
+                  f"{row['population_realloc_bytes_per_round'] / 1e6:.1f}"
+                  + (f" arena_mb_per_device="
+                     f"{row['per_device_arena_bytes'] / 1e6:.1f}"
+                     if "per_device_arena_bytes" in row else ""))
         print(f"round,{cname}_speedup,{case['steady_speedup']:.2f},"
               f"replay_identical=True "
               f"arrival_counts={case['distinct_arrival_counts']} "
               f"engine_compiles_per_entry=1")
+        if "sharded" in case:
+            print(f"round,{cname}_sharded,"
+                  f"{case['arena_bytes_per_device_reduction']:.2f},"
+                  f"arena_bytes_per_device_reduction over {mesh_shards} "
+                  f"shards, round_overhead="
+                  f"{case['sharded_round_overhead']:.2f}x, replay_identical")
     headline = cases["headline_eval256"]["steady_speedup"]
     print(f"round,result,{headline:.2f},-> {out}")
     if headline < 5:
@@ -180,8 +278,22 @@ if __name__ == "__main__":
                    help="CI smoke: small population, few rounds, no heavy case")
     p.add_argument("--n-clients", type=int, default=None)
     p.add_argument("--rounds", type=int, default=None)
+    p.add_argument("--mesh-shards", type=int, default=8,
+                   help="client-mesh width for the sharded case (1 disables; "
+                        "the needed CPU devices are forced in a subprocess)")
+    p.add_argument("--sharded-only", default=None, metavar="JSON",
+                   help="internal worker mode: run ONLY the sharded case for "
+                        "the given case params and print its metrics as JSON")
     p.add_argument("--out", default="BENCH_round.json")
     args = p.parse_args()
+    if args.sharded_only is not None:
+        kw = json.loads(args.sharded_only)
+        row = _run(True, kw["n_clients"], kw["sample_frac"], kw["rounds"],
+                   kw["eval_examples"], args.mesh_shards)
+        row["balances"] = row["balances"].tolist()    # exact: repr round-trip
+        print(json.dumps(row))
+        sys.exit(0)
     n = args.n_clients or (200 if args.quick else 1000)
     r = args.rounds or (10 if args.quick else 50)
-    main(n_clients=n, rounds=r, out=args.out, heavy_eval=not args.quick)
+    main(n_clients=n, rounds=r, out=args.out, heavy_eval=not args.quick,
+         mesh_shards=args.mesh_shards)

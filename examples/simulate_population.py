@@ -17,11 +17,22 @@ Finishes in well under 2 minutes on CPU.  Scenario knobs:
   --byzantine-frac                          freeriding hash commitments
   --sampler uniform|stake_weighted|cluster_stratified
   --mode sync|async  (async = FedBuff buffered aggregation + staleness)
+  --mesh-shards N                           row-shard the parameter arena
+                                            over an N-device client mesh
+                                            (CPU devices self-forced)
 """
 import argparse
 import hashlib
 import json
 import time
+
+if __name__ == "__main__":
+    # mesh mode needs the forced CPU device count BEFORE jax initialises
+    # (the repro.sim import below) — pre-parse and re-exec once
+    from repro.launch.bootstrap import force_host_device_count
+    _pre = argparse.ArgumentParser(add_help=False)
+    _pre.add_argument("--mesh-shards", type=int, default=1)
+    force_host_device_count(_pre.parse_known_args()[0].mesh_shards)
 
 import numpy as np
 
@@ -53,6 +64,7 @@ def main():
     ap.add_argument("--buffer-size", type=int, default=16)
     ap.add_argument("--concurrency", type=int, default=64)
     ap.add_argument("--staleness-alpha", type=float, default=0.5)
+    ap.add_argument("--mesh-shards", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-async-demo", action="store_true")
     args = ap.parse_args()
@@ -75,7 +87,8 @@ def main():
         n_clusters=args.clusters, local_epochs=args.local_epochs,
         deadline=args.deadline, sampler=args.sampler, mode=args.mode,
         buffer_size=args.buffer_size, concurrency=args.concurrency,
-        staleness_alpha=args.staleness_alpha, eval_every=5, seed=args.seed)
+        staleness_alpha=args.staleness_alpha, eval_every=5,
+        mesh_shards=args.mesh_shards, seed=args.seed)
     sim = SimulatedFederation(pop, cfg)
     rep = sim.run()
 

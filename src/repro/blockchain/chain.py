@@ -53,16 +53,57 @@ def hash_params(params: Pytree) -> str:
 
 
 def _merkle_root(tx_hashes: list[str]) -> str:
-    """Pairwise SHA-256 merkle root (duplicate last on odd levels)."""
+    """Domain-separated pairwise SHA-256 merkle root.
+
+    Leaf and interior hashes live in disjoint domains (RFC-6962 style) and an
+    odd node is *promoted* to the next level instead of paired with itself —
+    so appending a duplicate of the last transaction always changes the root.
+    The retired scheme (bare pairwise hashing, duplicate-last padding) allowed
+    the Bitcoin CVE-2012-2459 mutation: ``root([a, b, c]) == root([a, b, c,
+    c])``, letting ``validate()`` accept a chain whose block had its last tx
+    duplicated.  Old blocks built with that scheme still validate through
+    :func:`_legacy_merkle_root`'s explicit-self-pair check.
+    """
     if not tx_hashes:
         return hashlib.sha256(b"empty").hexdigest()
-    level = list(tx_hashes)
+    level = [hashlib.sha256(b"leaf:" + h.encode()).hexdigest()
+             for h in tx_hashes]
     while len(level) > 1:
+        nxt = [hashlib.sha256(b"node:" + (a + b).encode()).hexdigest()
+               for a, b in zip(level[::2], level[1::2])]
+        if len(level) % 2:
+            nxt.append(level[-1])                   # promote, never self-pair
+        level = nxt
+    return level[0]
+
+
+def _legacy_merkle_root(tx_hashes: list[str]) -> tuple[str, bool]:
+    """The retired duplicate-last-padding root, plus a mutation flag.
+
+    Returns ``(root, mutated)`` where ``mutated`` is True iff some level
+    hashes two *explicit* identical adjacent nodes together (Bitcoin's
+    CVE-2012-2459 detector): padding self-pairs an odd level's last node
+    implicitly, so an honest odd-length block never trips the flag, while
+    the duplicated-last-tx mutation — which produces the identical root —
+    always does.  Like Bitcoin, the detector cannot tell a mutation from a
+    legacy block that *legitimately* carried identical adjacent
+    transactions; such duplicates are treated as invalid (a commitment is
+    idempotent — re-submitting the identical tx carries no information, and
+    in-repo legacy chains never contained one).  Blocks packed after the
+    domain separation never consult this fallback, so duplicate txs in NEW
+    blocks validate fine."""
+    if not tx_hashes:
+        return hashlib.sha256(b"empty").hexdigest(), False
+    level = list(tx_hashes)
+    mutated = False
+    while len(level) > 1:
+        mutated |= any(level[i] == level[i + 1]
+                       for i in range(0, len(level) - 1, 2))
         if len(level) % 2:
             level.append(level[-1])
         level = [hashlib.sha256((a + b).encode()).hexdigest()
                  for a, b in zip(level[::2], level[1::2])]
-    return level[0]
+    return level[0], mutated
 
 
 @dataclass(frozen=True)
@@ -112,12 +153,23 @@ class Blockchain:
         return block
 
     def validate(self) -> bool:
-        """Full-chain validation: hash links + merkle roots."""
+        """Full-chain validation: hash links + merkle roots.
+
+        A block's recorded root must match the domain-separated scheme; a
+        block packed before the domain separation (legacy duplicate-last
+        padding) is still accepted on its legacy root, but only when the
+        legacy computation saw no explicit self-paired nodes — the
+        CVE-2012-2459 duplicated-tx mutation reproduces the legacy root yet
+        always trips that flag, so the mutated chain is rejected under both
+        schemes."""
         for prev, cur in zip(self.blocks, self.blocks[1:]):
             if cur.prev_hash != prev.block_hash():
                 return False
-            if cur.merkle_root != _merkle_root([t.tx_hash() for t in cur.transactions]):
-                return False
+            hashes = [t.tx_hash() for t in cur.transactions]
+            if cur.merkle_root != _merkle_root(hashes):
+                legacy_root, mutated = _legacy_merkle_root(hashes)
+                if mutated or cur.merkle_root != legacy_root:
+                    return False
         return True
 
     # ------------------------------------------------------------------ #
@@ -131,6 +183,12 @@ class Blockchain:
         the producer's entry for the copier holds what the copier actually
         delivered).
 
+        Duplicates resolve first-wins on BOTH sides: a client's first
+        ``model_hash`` is the digest the producer actually saw, and only the
+        first ``agg_commit`` *sent by the block's producer* is consulted —
+        any other sender's record is ignored (a client must not be able to
+        front-run the producer and control the round's verification basis).
+
         Legacy ``agg_hash`` blocks (pre-sender-binding) fall back to the old
         set-membership rule so historic chains replay; new blocks never mix
         the two kinds."""
@@ -139,8 +197,19 @@ class Blockchain:
         legacy: set[str] = set()
         for tx in block.transactions:
             if tx.kind == "model_hash":
-                committed[tx.sender] = tx.payload
+                # FIRST commit wins — the digest the producer actually saw
+                # and aggregated.  Last-wins let a client re-submit after the
+                # producer recorded it and be judged against the wrong digest
+                # (honest clients punished, or a freerider aligning its late
+                # commit with the producer's entry for it).
+                committed.setdefault(tx.sender, tx.payload)
             elif tx.kind == AGG_COMMIT_KIND:
+                if tx.sender != block.producer:
+                    continue            # only the packing producer's record
+                                        # counts: a client must not front-run
+                                        # the round's verification basis
+                if bound is not None:
+                    continue            # first agg_commit wins, like commits
                 try:
                     commits = RoundCommitments.from_payload(block.round_idx,
                                                             tx.payload)

@@ -30,14 +30,19 @@ class TokenLedger:
     def settle_round(self, client_reward: np.ndarray, fee: float,
                      producer: int, verified: np.ndarray) -> None:
         """Verified clients receive their reward and pay the aggregation fee;
-        the producer collects all fees; unverified rewards are burned (the
+        the producer collects the fees only if its OWN commitment verified —
+        a producer that failed verification (freeriding aggregator) earns
+        nothing and the fees are burned alongside the unverified rewards (the
         unclaimed part of the pool never enters balances)."""
         client_reward = np.asarray(client_reward, dtype=np.float64)
         verified = np.asarray(verified, dtype=bool)
         paid = np.where(verified, client_reward, 0.0)
         fees = np.where(verified, fee, 0.0)
         self.balances = self.balances + paid - fees
-        self.balances[producer] += fees.sum()
+        if verified[producer]:
+            self.balances[producer] += fees.sum()
+        else:
+            self.minted -= float(fees.sum())        # forfeited fees leave supply
         # burned tokens leave supply
         self.minted -= float(np.where(~verified, client_reward, 0.0).sum())
 

@@ -25,6 +25,17 @@ Evaluation entries are split so each compiles exactly once: a fixed-shape
 mask-weighted cohort eval (round metric), a single-row global eval (async),
 and a population eval with its own entry (final metric) so the final pass
 never retraces the round-eval program.
+
+Mesh mode (``sharding=`` a client-axis ``NamedSharding`` from
+``repro.runtime.arena.ShardedParamArena``): the arena rows stay sharded
+across the device mesh — each device holds ``n/shards`` rows and the full
+O(n_clients · N_params) matrix never materialises on one device.  The
+cohort gather is constrained to a *replicated* (k, N) block, so every
+device runs exactly the single-device cohort program (train, PAA,
+fingerprints — identical shapes, identical arithmetic, bit-identical
+seeded replay), and the masked scatter-back lands only on the rows each
+device owns.  Per-round collective traffic is O(k · N): the cohort
+all-gather in, the row updates out.
 """
 from __future__ import annotations
 
@@ -79,9 +90,25 @@ class RoundEngine:
         local_epochs: int,
         kmeans_iters: int = 25,
         stacked_apply_fn: Callable | None = None,
+        sharding=None,                  # client-axis NamedSharding (mesh mode)
     ):
         self.layout = layout
         self.n_clusters = n_clusters
+        self.sharding = sharding
+        if sharding is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            replicated = NamedSharding(sharding.mesh, PartitionSpec())
+
+            def _rep(x):
+                """Pin cohort-sized values replicated: every device computes
+                the identical full-shape program — the bit-identity anchor."""
+                return jax.lax.with_sharding_constraint(x, replicated)
+
+            def _shd(x):
+                """Pin the population arena to its row sharding."""
+                return jax.lax.with_sharding_constraint(x, sharding)
+        else:
+            _rep = _shd = lambda x: x
 
         def _client_accs(params, ex, ey):
             """(m,) per-client accuracy on the shared eval batch.  Uses the
@@ -102,7 +129,9 @@ class RoundEngine:
                                opt_state, cx, cy, extras, local_epochs)
 
         def _sync_step(arena, cohort_idx, cx, cy, arrived):
-            rows = arena[cohort_idx]                          # (k, N) gather
+            # (k, N) gather; mesh mode all-gathers ONLY the cohort rows to a
+            # replicated block (O(k·N) bytes), never the arena
+            rows = _rep(arena[cohort_idx])
             res = _train(layout.unflatten(rows), cx, cy)
             # PAA over ALL cohort slots (stragglers burn local compute too);
             # only the aggregation weights honour the arrival mask
@@ -123,7 +152,9 @@ class RoundEngine:
             # masked scatter-back: arrived slots adopt their cluster mean,
             # everyone else keeps their previous personalized row
             upd = jnp.where(arrived[:, None] > 0, new_rows, rows)
-            arena = arena.at[cohort_idx].set(upd)
+            # mesh mode: each device scatters only into the rows it owns, so
+            # the donated arena stays row-sharded end to end
+            arena = _shd(arena.at[cohort_idx].set(upd))
             return arena, SyncRoundOut(labels, corr, residues,
                                        jnp.mean(res.mean_loss), upd)
 
@@ -158,7 +189,8 @@ class RoundEngine:
             return _client_accs(layout.unflatten(global_row[None]), ex, ey)[0]
 
         def _eval_population(arena, ids, ex, ey):
-            return jnp.mean(_client_accs(layout.unflatten(arena[ids]), ex, ey))
+            rows = _rep(arena[ids])       # replicate only the sampled rows
+            return jnp.mean(_client_accs(layout.unflatten(rows), ex, ey))
 
         self.sync_step = jax.jit(_sync_step, donate_argnums=(0,))
         self.async_step = jax.jit(_async_step)

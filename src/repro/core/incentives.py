@@ -77,15 +77,15 @@ def apply_round_settlement(
     ledger; `repro.blockchain.ledger` is the authoritative host-side copy).
 
     * every *verified* client receives its reward and pays the aggregation fee g,
-    * the producer (aggregation client) collects all fees,
+    * the producer (aggregation client) collects the fees only if its OWN
+      commitment verified — an unverified producer forfeits them (burned),
     * unverified clients (hash mismatch — paper's anti-freeriding rule) receive
       nothing and pay nothing; their reward is burned rather than re-allocated,
       matching the paper's "only if ... hash values match" wording.
     """
     verified = verified.astype(balances.dtype)
-    m = balances.shape[0]
     fees = alloc.fee * verified                       # each verified client pays g
     credit = alloc.client_reward * verified
     balances = balances + credit - fees
-    balances = balances.at[producer].add(jnp.sum(fees))
+    balances = balances.at[producer].add(jnp.sum(fees) * verified[producer])
     return balances

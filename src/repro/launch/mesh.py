@@ -79,6 +79,30 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return compat_make_mesh((data, model), ("data", "model"))
 
 
+CLIENT_AXIS = "clients"
+
+
+def make_client_mesh(shards: int):
+    """1-D mesh sharding the *population* (client) axis of the parameter
+    arena (`repro.runtime.arena.ShardedParamArena`) over ``shards`` devices.
+
+    This is the federation scaling axis: population state is
+    O(n_clients · N_params), while per-round compute touches only O(cohort)
+    rows — so the arena rows spread across devices and the cohort working
+    set replicates.  On CPU, force multiple host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* the
+    first jax call (CI's mesh leg and the sharded tests do exactly this).
+    """
+    avail = len(jax.devices())
+    if shards > avail:
+        raise ValueError(
+            f"make_client_mesh({shards}) needs {shards} devices but only "
+            f"{avail} exist; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shards} before jax "
+            f"initialises")
+    return compat_make_mesh((shards,), (CLIENT_AXIS,))
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     """Mesh axes the global batch is sharded over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

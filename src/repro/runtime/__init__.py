@@ -1,2 +1,7 @@
 """Runtime substrate shared across core/kernels/sim: the parameter arena."""
-from repro.runtime.arena import ArenaLayout, ParamArena, bitcast_u32  # noqa: F401
+from repro.runtime.arena import (  # noqa: F401
+    ArenaLayout,
+    ParamArena,
+    ShardedParamArena,
+    bitcast_u32,
+)

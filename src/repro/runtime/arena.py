@@ -176,6 +176,11 @@ class ParamArena:
         upd = jnp.where(keep, rows, self.data[idx])
         self.data = self.data.at[idx].set(upd)
 
+    def rebind(self, flat: jax.Array) -> None:
+        """Install a freshly computed (n, N) population matrix (host-side
+        entry; the hot path donates ``data`` through the engine instead)."""
+        self.data = flat
+
     def as_pytree(self, rows: jax.Array | None = None) -> Pytree:
         """Pytree view of ``rows`` (default: the whole population)."""
         return self.layout.unflatten(self.data if rows is None else rows)
@@ -184,3 +189,93 @@ class ParamArena:
         """One client's (unstacked) param pytree."""
         return jax.tree_util.tree_map(
             lambda x: x[0], self.as_pytree(self.data[i][None]))
+
+
+class ShardedParamArena(ParamArena):
+    """A :class:`ParamArena` whose ``(n, N)`` matrix is row-sharded across a
+    1-D device mesh on the client axis (`repro.launch.mesh.make_client_mesh`).
+
+    Population state is the O(n_clients · N_params) scaling wall; the cohort
+    working set is only O(k · N).  So the arena rows spread over the mesh
+    (each device holds ``n_padded / shards`` rows) while the round engine
+    gathers the cohort to a *replicated* (k, N) block, computes exactly the
+    single-device program on it, and masked-scatters back into the rows each
+    device owns — the full arena never materialises on one device, and the
+    replicated cohort compute keeps seeded replay bit-identical to the
+    unsharded engine.
+
+    Rows are zero-padded up to a multiple of the shard count (0.4.x
+    NamedShardings require divisible dims); padding rows sit beyond every
+    real client id, are never gathered or scattered, and ``n_clients`` /
+    ``as_pytree`` expose only the logical population.
+
+    Scope of the "never on one device" invariant: it covers the ROUND LOOP —
+    every donated step consumes and produces the row-sharded matrix.  The
+    host-side entry points (``from_stacked``, ``rebind``, the driver's
+    ``params`` setter and async end-of-run broadcast) still build the full
+    matrix once on the default device before ``device_put`` redistributes
+    it, because the stacked *source* pytree they flatten is itself
+    single-device.  Sharded population *initialisation* (per-shard
+    ``make_array_from_callback`` fed by a sharded init) is the next scaling
+    rung — see ROADMAP.
+    """
+
+    def __init__(self, layout: ArenaLayout, data: jax.Array, n_clients: int,
+                 mesh):
+        from jax.sharding import NamedSharding, PartitionSpec
+        super().__init__(layout, data)
+        self._n_clients = int(n_clients)
+        self.mesh = mesh
+        axis = mesh.axis_names[0]
+        self.sharding = NamedSharding(mesh, PartitionSpec(axis))
+        self.replicated = NamedSharding(mesh, PartitionSpec())
+        if data.shape[0] % mesh.devices.size:
+            raise ValueError(
+                f"padded arena rows ({data.shape[0]}) not divisible by the "
+                f"{mesh.devices.size}-device client mesh")
+        self.data = jax.device_put(data, self.sharding)
+
+    @classmethod
+    def from_stacked(cls, stacked: Pytree, mesh, dtype=jnp.float32
+                     ) -> "ShardedParamArena":
+        layout = ArenaLayout.from_stacked(stacked, dtype=dtype)
+        flat = layout.flatten(stacked)
+        n = flat.shape[0]
+        return cls(layout, cls._pad_rows(flat, n, mesh), n, mesh)
+
+    @staticmethod
+    def _pad_rows(flat: jax.Array, n_clients: int, mesh) -> jax.Array:
+        shards = mesh.devices.size
+        n_padded = -(-n_clients // shards) * shards
+        if n_padded != flat.shape[0]:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((n_padded - flat.shape[0], flat.shape[1]),
+                                 flat.dtype)])
+        return flat
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def n_clients(self) -> int:          # logical population, not padded rows
+        return self._n_clients
+
+    @property
+    def n_padded(self) -> int:
+        return int(self.data.shape[0])
+
+    def rebind(self, flat: jax.Array) -> None:
+        """Install a freshly computed (n, N) population matrix, re-padding and
+        re-placing it onto the mesh (host-side entry; the hot path donates
+        ``data`` through the engine instead)."""
+        self.data = jax.device_put(
+            self._pad_rows(flat, self._n_clients, self.mesh), self.sharding)
+
+    def as_pytree(self, rows: jax.Array | None = None) -> Pytree:
+        if rows is None:
+            rows = self.data[: self._n_clients]      # drop padding rows
+        return self.layout.unflatten(rows)
+
+    def per_device_bytes(self) -> int:
+        """Arena bytes resident on ONE device (the scaling headline)."""
+        shard = self.data.addressable_shards[0].data
+        return int(np.prod(shard.shape) * shard.dtype.itemsize)

@@ -25,6 +25,12 @@ gathers/scatters and shape-polymorphic eval — as the bit-identical oracle
 for the engine (`tests/test_engine.py`) and the baseline for
 ``benchmarks/round_bench.py``.
 
+``SimConfig.mesh_shards > 1`` row-shards the parameter arena over a
+client-axis device mesh (`repro.runtime.arena.ShardedParamArena`): each
+device holds only ``n_clients/shards`` rows of population state while the
+cohort working set replicates, so seeded replay stays bit-identical to the
+single-device engine (`tests/test_sharded_engine.py`).
+
 Everything is driven by seeded numpy generators and a deterministic event
 queue: two runs with the same config produce identical event logs, block
 hashes, ledger balances and final parameters — with the engine on or off.
@@ -53,7 +59,7 @@ from repro.core.engine import RoundEngine
 from repro.core.fl import global_evaluate, local_train
 from repro.models import classifier as clf
 from repro.optim import adam
-from repro.runtime.arena import ParamArena
+from repro.runtime.arena import ParamArena, ShardedParamArena
 from repro.sim import events as ev
 from repro.sim.async_agg import (
     BufferedAggregator,
@@ -93,6 +99,10 @@ class SimConfig:
     hidden: tuple[int, ...] = (64,)
     rep_dim: int = 32
     engine: bool = True               # arena-backed fused round engine
+    mesh_shards: int = 1              # >1: shard the arena's client axis over
+                                      # a device mesh (engine mode only); on
+                                      # CPU force devices with XLA_FLAGS=
+                                      # --xla_force_host_platform_device_count=N
     seed: int = 0
 
 
@@ -185,16 +195,27 @@ class SimulatedFederation:
         n_clusters = config.n_clusters
         epochs = config.local_epochs
 
+        if config.mesh_shards > 1 and not config.engine:
+            raise ValueError("mesh_shards > 1 requires engine=True (the "
+                             "legacy oracle driver is single-device only)")
         if config.engine:
             # flatten the population ONCE into the (n, N) arena; all round
-            # state now lives as donated rows of this matrix
-            self.arena = ParamArena.from_stacked(self._params)
+            # state now lives as donated rows of this matrix.  mesh_shards>1
+            # row-shards the arena over a client-axis device mesh — each
+            # device then holds only n/shards rows of population state
+            if config.mesh_shards > 1:
+                from repro.launch.mesh import make_client_mesh
+                self.arena = ShardedParamArena.from_stacked(
+                    self._params, make_client_mesh(config.mesh_shards))
+            else:
+                self.arena = ParamArena.from_stacked(self._params)
             self._params = None
             self.engine = RoundEngine(
                 self.arena.layout, apply_fn=self.bundle.apply_fn,
                 embed_fn=embed_fn, strategy=strategy, opt=opt, probe=probe,
                 n_clusters=n_clusters, local_epochs=epochs,
-                stacked_apply_fn=functools.partial(clf.apply_stacked, mcfg))
+                stacked_apply_fn=functools.partial(clf.apply_stacked, mcfg),
+                sharding=getattr(self.arena, "sharding", None))
 
         # ------- legacy (pre-arena) jitted programs, kept as the oracle ---- #
 
@@ -244,7 +265,7 @@ class SimulatedFederation:
     @params.setter
     def params(self, value: Pytree) -> None:
         if self.arena is not None:
-            self.arena.data = self.arena.layout.flatten(value)
+            self.arena.rebind(self.arena.layout.flatten(value))
         else:
             self._params = value
 
@@ -470,8 +491,9 @@ class SimulatedFederation:
             self.event_log.append((self.clock.now, "queue_drained", -1,
                                    version, 0))
         if self.arena is not None:
-            self.arena.data = jnp.broadcast_to(
-                global_state[None], self.arena.data.shape)
+            self.arena.rebind(jnp.broadcast_to(
+                global_state[None],
+                (self.arena.n_clients,) + global_state.shape))
         else:
             self._params = jax.tree.map(
                 lambda g: jnp.broadcast_to(g[None], (pop.n_clients,) + g.shape),

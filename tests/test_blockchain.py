@@ -17,6 +17,7 @@ from repro.blockchain import (
     hash_params,
     verify_membership,
 )
+from repro.blockchain.chain import _legacy_merkle_root, _merkle_root
 
 
 def test_hash_params_deterministic_and_sensitive():
@@ -44,6 +45,59 @@ def test_chain_links_and_validation():
     chain.blocks[2] = Block(b.index, b.round_idx, 9, b.prev_hash,
                             b.merkle_root, b.transactions)
     assert not chain.validate()
+
+
+def test_duplicated_last_tx_mutation_fails_validation():
+    """CVE-2012-2459 analogue: under the retired merkle scheme (duplicate
+    last hash on odd levels) a block whose last transaction is duplicated
+    kept the same root, so ``validate()`` accepted the mutated chain.  The
+    domain-separated root rejects it."""
+    chain = Blockchain()
+    pool = TxPool()
+    for i in range(3):                       # odd count → old scheme self-paired
+        pool.submit(Transaction("model_hash", i, f"h{i}", 0))
+    block = chain.pack_block(0, producer=0, pool=pool)
+    assert chain.validate()
+
+    # the mutation: append a duplicate of the last tx, keep the recorded root
+    mutated = Block(block.index, block.round_idx, block.producer,
+                    block.prev_hash, block.merkle_root,
+                    block.transactions + (block.transactions[-1],))
+    # regression guard: the retired scheme really did collide on this mutation
+    legacy_orig, _ = _legacy_merkle_root(
+        [t.tx_hash() for t in block.transactions])
+    legacy_mut, flagged = _legacy_merkle_root(
+        [t.tx_hash() for t in mutated.transactions])
+    assert legacy_orig == legacy_mut and flagged
+    chain.blocks[-1] = mutated
+    assert not chain.validate()
+
+
+def test_legacy_merkle_blocks_still_validate():
+    """A chain whose blocks recorded pre-domain-separation roots (old code)
+    must keep validating after the fix — but its mutated variant must not."""
+    chain = Blockchain()
+    pool = TxPool()
+    for i in range(3):
+        pool.submit(Transaction("model_hash", i, f"h{i}", 0))
+    txs = tuple(pool.drain())
+    legacy_root, mutated = _legacy_merkle_root([t.tx_hash() for t in txs])
+    assert not mutated
+    old_block = Block(1, 0, 0, chain.head.block_hash(), legacy_root, txs)
+    chain.blocks.append(old_block)
+    assert chain.validate()                       # migration path
+    chain.blocks[-1] = Block(1, 0, 0, old_block.prev_hash, legacy_root,
+                             txs + (txs[-1],))
+    assert not chain.validate()                   # same root, flagged mutation
+
+
+def test_merkle_root_domain_separated():
+    """Leaf and interior domains are disjoint: a 'block' whose single tx hash
+    equals another block's interior node cannot forge that block's root."""
+    a, b = "aa", "bb"
+    root2 = _merkle_root([a, b])
+    assert _merkle_root([root2]) != root2
+    assert _merkle_root([a]) != a
 
 
 def test_verify_round_accepts_matching_rejects_tampered():
@@ -91,6 +145,67 @@ def test_hash_copy_freerider_regression():
     bound_ok = Blockchain().verify_round(
         _copy_attack_block(Blockchain(), TxPool(), legacy=False), 3)
     np.testing.assert_array_equal(bound_ok, [True, True, False])   # rejected
+
+
+def test_duplicate_commits_resolve_first_wins_on_both_sides():
+    """A client that re-submits a model_hash AFTER the producer recorded it
+    must be judged against its FIRST commit — the digest the producer actually
+    aggregated.  Last-wins (the old behavior) judged the client against the
+    late re-submission: an honest re-submitter was punished, and a freerider
+    could overwrite its commit to match the producer's entry for it."""
+    chain = Blockchain()
+    pool = TxPool()
+    pool.submit(Transaction("model_hash", 0, "d0", 0))
+    pool.submit(Transaction("model_hash", 1, "d1", 0))
+    commits = RoundCommitments(0, ((0, "d0"), (1, "d1")))
+    pool.submit(Transaction(AGG_COMMIT_KIND, 0, commits.to_payload(), 0))
+    # client 0 re-submits a different digest after the producer's record;
+    # client 1 re-submits the digest the producer bound to it (alignment try)
+    pool.submit(Transaction("model_hash", 0, "d0-late", 0))
+    pool.submit(Transaction("model_hash", 1, "d1", 0))
+    ok = chain.verify_round(chain.pack_block(0, 0, pool), 2)
+    np.testing.assert_array_equal(ok, [True, True])
+
+    # the freerider direction: first commit is wrong, late commit aligned
+    pool.submit(Transaction("model_hash", 0, "not-what-was-delivered", 1))
+    commits = RoundCommitments(1, ((0, "actual-delivery"),))
+    pool.submit(Transaction(AGG_COMMIT_KIND, 0, commits.to_payload(), 1))
+    pool.submit(Transaction("model_hash", 0, "actual-delivery", 1))
+    ok = chain.verify_round(chain.pack_block(1, 0, pool), 1)
+    np.testing.assert_array_equal(ok, [False])
+
+
+def test_agg_commit_from_non_producer_is_ignored():
+    """First-wins must not be front-runnable: an agg_commit submitted by a
+    NON-producer before the producer's genuine record (malformed or forged)
+    is ignored entirely — verification still runs against the producer's
+    record instead of wiping or rewriting the round."""
+    chain = Blockchain()
+    pool = TxPool()
+    pool.submit(Transaction("model_hash", 0, "d0", 0))
+    # attacker front-runs with a forged record, then with garbage
+    forged = RoundCommitments(0, ((0, "evil"),))
+    pool.submit(Transaction(AGG_COMMIT_KIND, 5, forged.to_payload(), 0))
+    pool.submit(Transaction(AGG_COMMIT_KIND, 6, "not json", 0))
+    real = RoundCommitments(0, ((0, "d0"),))
+    pool.submit(Transaction(AGG_COMMIT_KIND, 3, real.to_payload(), 0))
+    ok = chain.verify_round(chain.pack_block(0, producer=3, pool=pool), 1)
+    np.testing.assert_array_equal(ok, [True])
+
+
+def test_duplicate_agg_commits_first_wins():
+    """Multiple producer records in one block: the first wins, mirroring the
+    first-wins rule for client commits (a second, conflicting record cannot
+    retroactively re-judge the round)."""
+    chain = Blockchain()
+    pool = TxPool()
+    pool.submit(Transaction("model_hash", 0, "d0", 0))
+    good = RoundCommitments(0, ((0, "d0"),))
+    bad = RoundCommitments(0, ((0, "evil"),))
+    pool.submit(Transaction(AGG_COMMIT_KIND, 1, good.to_payload(), 0))
+    pool.submit(Transaction(AGG_COMMIT_KIND, 1, bad.to_payload(), 0))
+    ok = chain.verify_round(chain.pack_block(0, 1, pool), 1)
+    np.testing.assert_array_equal(ok, [True])
 
 
 def test_agg_commit_preserves_duplicate_entries():
@@ -166,3 +281,38 @@ def test_ledger_conservation_with_burn():
     np.testing.assert_allclose(ledger.balances[2], 5.0)
     # supply = stakes + pool - burned
     np.testing.assert_allclose(ledger.total_supply(), 4 * 5 + 20 - 6.0)
+
+
+def test_unverified_producer_forfeits_fees():
+    """A producer whose own commitment failed verification must NOT collect
+    the aggregation fees (the old behavior paid it unconditionally — an
+    unverified aggregator still profited from every verified client).  The
+    fees are burned and supply stays conserved."""
+    ledger = TokenLedger(4, initial_stake=5.0)
+    ledger.mint_reward_pool(20.0)
+    rewards = np.asarray([6.0, 6.0, 6.0, 2.0])
+    verified = np.asarray([False, True, True, True])     # producer 0 failed
+    ledger.settle_round(rewards, fee=0.5, producer=0, verified=verified)
+    assert ledger.conserved()
+    # producer: no reward (unverified), no fee income — stake untouched
+    np.testing.assert_allclose(ledger.balances[0], 5.0)
+    # verified clients: reward − fee as usual
+    np.testing.assert_allclose(ledger.balances[1], 5.0 + 6.0 - 0.5)
+    # supply = stakes + pool − burned reward − burned fees
+    np.testing.assert_allclose(ledger.total_supply(),
+                               4 * 5 + 20 - 6.0 - 3 * 0.5)
+
+
+def test_ledger_conservation_property_random_rounds():
+    """Conservation holds over a stream of random settlements including
+    unverified producers (the forfeited-fee burn path)."""
+    rng = np.random.default_rng(0)
+    ledger = TokenLedger(16, initial_stake=5.0)
+    for _ in range(50):
+        rewards = rng.uniform(0.0, 3.0, 16)
+        verified = rng.random(16) < 0.7
+        producer = int(rng.integers(16))
+        ledger.mint_reward_pool(float(rewards.sum()))
+        ledger.settle_round(rewards, fee=float(rng.uniform(0, 0.3)),
+                            producer=producer, verified=verified)
+        assert ledger.conserved()

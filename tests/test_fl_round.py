@@ -64,7 +64,8 @@ def test_baselines_run_and_learn(name):
 def test_tamper_settlement_exact():
     """End-to-end: run_round(tamper=...) → Blockchain.verify_round zeroes the
     tampered clients' rewards while every honest client settles exactly
-    reward − fee (+ all fees for the producer), and supply is conserved."""
+    reward − fee (+ all fees for the producer, iff the producer itself
+    verified), and supply is conserved."""
     bundle, sp, (cx, cy), (xe, ye), probe = _setup(m=6, seed=3)
     strat = make_bfln(bundle, probe, n_clusters=2)
     tr = FederatedTrainer(bundle, strat, adam(1e-3), local_epochs=1, n_clusters=2)
@@ -84,7 +85,7 @@ def test_tamper_settlement_exact():
         expect = stake
         if verified[i]:
             expect += float(alloc.client_reward[i]) - fee
-        if i == rec.producer:
+        if i == rec.producer and verified[i]:
             expect += fee * verified.sum()
         np.testing.assert_allclose(tr.ledger.balances[i], expect, rtol=1e-5,
                                    err_msg=f"client {i}")

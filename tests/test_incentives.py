@@ -73,3 +73,41 @@ def test_settlement_routes_fees_to_producer():
     expected_total = 20.0 + 4 * 5.0 - float(alloc.client_reward[3])
     np.testing.assert_allclose(new.sum(), expected_total, rtol=1e-6)
     assert new[0] > new[1]  # producer collected fees
+
+
+def test_unverified_producer_forfeits_fees_jittable_mirror():
+    """The jittable settlement burns the fees of an unverified producer
+    (regression: it used to credit them unconditionally) and stays in exact
+    agreement with the host-side ``TokenLedger.settle_round``."""
+    from repro.blockchain import TokenLedger
+    labels = jnp.asarray([0, 0, 1, 1])
+    alloc = allocate_rewards(labels, 2, 20.0, 2.0)
+    balances = jnp.full((4,), 5.0)
+    verified = jnp.asarray([False, True, True, True])   # producer 0 unverified
+    new = np.asarray(apply_round_settlement(balances, alloc, producer=0,
+                                            verified=verified))
+    fee = float(alloc.fee)
+    # producer: no reward, no fees — balance untouched
+    np.testing.assert_allclose(new[0], 5.0, rtol=1e-6)
+    # verified clients pay their fee but nobody receives it
+    np.testing.assert_allclose(
+        new[1:], 5.0 + np.asarray(alloc.client_reward[1:]) - fee, rtol=1e-6)
+
+    # exact agreement with the authoritative host ledger
+    ledger = TokenLedger(4, initial_stake=5.0)
+    ledger.mint_reward_pool(20.0)
+    ledger.settle_round(np.asarray(alloc.client_reward), fee, producer=0,
+                        verified=np.asarray(verified))
+    np.testing.assert_allclose(ledger.balances, new, rtol=1e-6)
+    assert ledger.conserved()
+
+    # and with a verified producer the two mirrors also agree
+    verified = jnp.asarray([True, True, False, True])
+    new = np.asarray(apply_round_settlement(balances, alloc, producer=0,
+                                            verified=verified))
+    ledger = TokenLedger(4, initial_stake=5.0)
+    ledger.mint_reward_pool(20.0)
+    ledger.settle_round(np.asarray(alloc.client_reward), fee, producer=0,
+                        verified=np.asarray(verified))
+    np.testing.assert_allclose(ledger.balances, new, rtol=1e-6)
+    assert ledger.conserved()

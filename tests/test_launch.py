@@ -18,6 +18,16 @@ def test_fl_target_builds_abstract():
     assert shapes["w0"].shape == (8, 32, 64)
 
 
+def test_make_client_mesh_shapes_and_device_guard():
+    from repro.launch.mesh import CLIENT_AXIS, make_client_mesh
+    n = len(jax.devices())
+    mesh = make_client_mesh(n)
+    assert mesh.axis_names == (CLIENT_AXIS,)
+    assert mesh.shape[CLIENT_AXIS] == n
+    with pytest.raises(ValueError, match="host_platform_device_count"):
+        make_client_mesh(n + 1)
+
+
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_step_cost_defined_for_all_runnable_combos(arch):
     for shape_name, shape in SHAPES.items():
