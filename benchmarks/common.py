@@ -1,16 +1,13 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import FederatedTrainer, ModelBundle, make_bfln
-from repro.core.baselines import STRATEGY_FACTORIES
-from repro.data import dirichlet_partition, make_classification_dataset, pack_clients
-from repro.data.partition import sample_probe_batch
+from repro.api import build_strategy, load_packed_clients, make_mlp_bundle
+from repro.core import FederatedTrainer
 from repro.models import classifier as clf
 from repro.optim import adam
 
@@ -30,35 +27,23 @@ def run_fl(dataset: str, bias: float, strategy: str, *, n_clients: int = 20,
            batch_size: int = 64, n_clusters: int = 5, seed: int = 0,
            psi: int = 32):
     """One federated training run; returns (trainer, personalized_acc)."""
-    (xt, yt), (xe, ye) = make_classification_dataset(dataset, seed=seed)
-    parts = dirichlet_partition(yt, n_clients, bias, seed=seed)
-    cx, cy, tx, ty = pack_clients(xt, yt, parts, n_batches=n_batches,
-                                  batch_size=batch_size, seed=seed)
-    num_classes = int(yt.max()) + 1
-    cfg = clf.MLPConfig(in_dim=xt.shape[1], hidden=(128,), rep_dim=64,
-                        num_classes=num_classes)
-    bundle = ModelBundle(functools.partial(clf.apply, cfg),
-                         functools.partial(clf.embed, cfg), num_classes)
+    data = load_packed_clients(dataset, n_clients, bias, n_batches=n_batches,
+                               batch_size=batch_size, psi=psi, seed=seed)
+    cfg, bundle = make_mlp_bundle(data.in_dim, data.num_classes)
     sp = clf.init_stacked(cfg, jax.random.PRNGKey(seed), n_clients)
 
-    if strategy == "bfln":
-        probe = jnp.asarray(sample_probe_batch(xt, yt, category=0, psi=psi,
-                                               seed=seed))
-        strat = make_bfln(bundle, probe, n_clusters)
-        tr = FederatedTrainer(bundle, strat, adam(1e-3),
-                              local_epochs=local_epochs, n_clusters=n_clusters)
-    else:
-        strat = STRATEGY_FACTORIES[strategy](bundle)
-        tr = FederatedTrainer(bundle, strat, adam(1e-3),
-                              local_epochs=local_epochs, use_chain=False)
+    strat = build_strategy(strategy, bundle, probe=data.probe,
+                           n_clusters=n_clusters)
+    tr = FederatedTrainer(bundle, strat, adam(1e-3),
+                          local_epochs=local_epochs, n_clusters=n_clusters,
+                          use_chain=(strategy == "bfln"))
 
     p, o = tr.init(sp)
-    cx, cy = jnp.asarray(cx), jnp.asarray(cy)
-    xe, ye = jnp.asarray(xe), jnp.asarray(ye)
     for r in range(rounds):
-        p, o, _ = tr.run_round(r, p, o, cx, cy, xe, ye)
+        p, o, _ = tr.run_round(r, p, o, data.cx, data.cy,
+                               data.test_x, data.test_y)
 
     from repro.core.fl import evaluate
-    pacc = float(jnp.mean(evaluate(bundle.apply_fn, p, jnp.asarray(tx),
-                                   jnp.asarray(ty))))
+    pacc = float(jnp.mean(evaluate(bundle.apply_fn, p, jnp.asarray(data.tx),
+                                   jnp.asarray(data.ty))))
     return tr, pacc

@@ -39,6 +39,12 @@ that the engine compiled each used entry exactly once, then emits
 bytes, per-round population realloc, per-device arena bytes) so the perf
 trajectory is tracked PR over PR.
 
+The engine is strategy-generic (PR 5): ``--strategy`` picks the strategy
+for the headline legacy-vs-engine case, and a per-strategy sweep records
+the steady engine round latency of EVERY registered strategy (bfln,
+fedavg, fedprox, fedproto, fedhkd) into ``per_strategy_steady_ms`` —
+each asserted at 1 compile per entry.
+
 Prints ``round,<name>,<us_per_round>,<derived>`` CSV like the other benches.
 """
 from __future__ import annotations
@@ -65,23 +71,30 @@ if __name__ == "__main__":
 
 import numpy as np
 
-from repro.sim import ClientPopulation, PopulationSpec, SimConfig, SimulatedFederation
+from repro.sim import ClientPopulation, PopulationSpec, SimulatedFederation
 from repro.utils.tree import tree_bytes
 
 WARMUP = 3            # rounds excluded from the steady-state mean (compiles)
 
 
 def _build(engine: bool, n_clients: int, sample_frac: float, rounds: int,
-           eval_examples: int, mesh_shards: int = 1) -> SimulatedFederation:
+           eval_examples: int, mesh_shards: int = 1,
+           strategy: str = "bfln") -> SimulatedFederation:
+    import repro.api as api
+
     # fresh population per driver: LatencyModel draws advance an internal rng,
     # so sharing one instance would desynchronise the second run
-    spec = PopulationSpec(n_clients=n_clients, straggler_frac=0.1,
-                          dropout_rate=0.03, byzantine_frac=0.05, seed=0)
-    pop = ClientPopulation.from_spec(spec)
-    cfg = SimConfig(rounds=rounds, sample_frac=sample_frac, n_clusters=5,
-                    eval_every=1, eval_examples=eval_examples, seed=0,
-                    engine=engine, mesh_shards=mesh_shards)
-    return SimulatedFederation(pop, cfg)
+    pspec = PopulationSpec(n_clients=n_clients, straggler_frac=0.1,
+                           dropout_rate=0.03, byzantine_frac=0.05, seed=0)
+    pop = ClientPopulation.from_spec(pspec)
+    spec = api.ExperimentSpec(
+        data=api.DataSpec(n_clients=n_clients, straggler_frac=0.1,
+                          dropout_rate=0.03, byzantine_frac=0.05),
+        train=api.TrainSpec(strategy=strategy, rounds=rounds,
+                            sample_frac=sample_frac, n_clusters=5),
+        eval=api.EvalSpec(every=1, examples=eval_examples),
+        mesh=api.MeshSpec(shards=mesh_shards), engine=engine, seed=0)
+    return SimulatedFederation(pop, spec)
 
 
 def _compile_counts(sim: SimulatedFederation) -> dict[str, int]:
@@ -101,9 +114,10 @@ def _arena_ptrs(sim: SimulatedFederation) -> list[int]:
 
 
 def _run(engine: bool, n_clients: int, sample_frac: float, rounds: int,
-         eval_examples: int, mesh_shards: int = 1) -> dict:
+         eval_examples: int, mesh_shards: int = 1,
+         strategy: str = "bfln") -> dict:
     sim = _build(engine, n_clients, sample_frac, rounds, eval_examples,
-                 mesh_shards)
+                 mesh_shards, strategy)
     times_ms = []
     for r in range(rounds):
         t0 = time.perf_counter()
@@ -135,6 +149,7 @@ def _run(engine: bool, n_clients: int, sample_frac: float, rounds: int,
     counts = sorted({int(rec.arrived.sum()) for rec in sim.history})
     out = {
         "engine": engine,
+        "strategy": strategy,
         "rounds": rounds,
         "first_round_ms": round(times_ms[0], 2),
         "steady_ms": round(float(np.mean(steady)), 3),
@@ -156,7 +171,8 @@ def _run(engine: bool, n_clients: int, sample_frac: float, rounds: int,
 
 
 def _sharded_run(n_clients: int, sample_frac: float, rounds: int,
-                 eval_examples: int, mesh_shards: int) -> dict:
+                 eval_examples: int, mesh_shards: int,
+                 strategy: str = "bfln") -> dict:
     """The mesh-sharded engine run — in-process when enough devices already
     exist, otherwise via a ``--sharded-only`` subprocess that self-forces the
     CPU device count (keeping THIS process single-device so the legacy and
@@ -164,9 +180,10 @@ def _sharded_run(n_clients: int, sample_frac: float, rounds: int,
     import jax
     if mesh_shards <= len(jax.devices()):
         return _run(True, n_clients, sample_frac, rounds, eval_examples,
-                    mesh_shards)
+                    mesh_shards, strategy)
     payload = json.dumps({"n_clients": n_clients, "sample_frac": sample_frac,
-                          "rounds": rounds, "eval_examples": eval_examples})
+                          "rounds": rounds, "eval_examples": eval_examples,
+                          "strategy": strategy})
     out = subprocess.run(
         [sys.executable, os.path.abspath(__file__), "--sharded-only", payload,
          "--mesh-shards", str(mesh_shards)],
@@ -177,9 +194,12 @@ def _sharded_run(n_clients: int, sample_frac: float, rounds: int,
 
 
 def _case(n_clients: int, sample_frac: float, rounds: int,
-          eval_examples: int, mesh_shards: int = 1) -> dict:
-    legacy = _run(False, n_clients, sample_frac, rounds, eval_examples)
-    engine = _run(True, n_clients, sample_frac, rounds, eval_examples)
+          eval_examples: int, mesh_shards: int = 1,
+          strategy: str = "bfln") -> dict:
+    legacy = _run(False, n_clients, sample_frac, rounds, eval_examples,
+                  strategy=strategy)
+    engine = _run(True, n_clients, sample_frac, rounds, eval_examples,
+                  strategy=strategy)
 
     # correctness gates: identical replay, exactly one compile per used entry
     assert legacy["block_hashes"] == engine["block_hashes"], \
@@ -193,6 +213,7 @@ def _case(n_clients: int, sample_frac: float, rounds: int,
 
     drop = ("block_hashes", "balances", "engine", "rounds")
     case = {
+        "strategy": strategy,
         "eval_examples": eval_examples,
         "distinct_arrival_counts": engine["distinct_arrival_counts"],
         "legacy": {k: v for k, v in legacy.items() if k not in drop},
@@ -202,7 +223,7 @@ def _case(n_clients: int, sample_frac: float, rounds: int,
     }
     if mesh_shards > 1:
         sharded = _sharded_run(n_clients, sample_frac, rounds, eval_examples,
-                               mesh_shards)
+                               mesh_shards, strategy)
         # the sharded engine must replay bit-identically to both others
         assert sharded["block_hashes"] == engine["block_hashes"], \
             "sharded replay diverged from the single-device engine"
@@ -220,14 +241,36 @@ def _case(n_clients: int, sample_frac: float, rounds: int,
     return case
 
 
+def _strategy_sweep(n_clients: int, sample_frac: float, rounds: int,
+                    eval_examples: int) -> dict:
+    """Steady-round engine latency for EVERY registered strategy — the
+    strategy-generic fused engine's per-strategy cost (1 compile per entry
+    asserted for each)."""
+    from repro.api import strategy_names
+    sweep = {}
+    for name in strategy_names():
+        row = _run(True, n_clients, sample_frac, rounds, eval_examples,
+                   strategy=name)
+        used = {k: v for k, v in row["compile_counts"].items() if v}
+        assert all(v == 1 for v in used.values()), \
+            f"{name} engine entry recompiled: {row['compile_counts']}"
+        sweep[name] = {"steady_ms": row["steady_ms"],
+                       "steady_p50_ms": row["steady_p50_ms"],
+                       "first_round_ms": row["first_round_ms"]}
+    return sweep
+
+
 def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
          out: str = "BENCH_round.json", heavy_eval: bool = True,
-         mesh_shards: int = 8) -> dict:
+         mesh_shards: int = 8, strategy: str = "bfln") -> dict:
     cases = {"headline_eval256": _case(n_clients, sample_frac, rounds, 256,
-                                       mesh_shards)}
+                                       mesh_shards, strategy)}
     if heavy_eval:
         cases["heavy_eval1024"] = _case(n_clients, sample_frac, rounds, 1024,
-                                        mesh_shards)
+                                        mesh_shards, strategy)
+
+    sweep_rounds = max(WARMUP + 2, rounds // 5)
+    per_strategy = _strategy_sweep(n_clients, sample_frac, sweep_rounds, 256)
 
     result = {
         "bench": "round",
@@ -235,6 +278,8 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
         "cohort": max(1, int(round(sample_frac * n_clients))),
         "rounds": rounds,
         "mesh_shards": mesh_shards,
+        "strategy": strategy,
+        "per_strategy_steady_ms": per_strategy,
         **cases,
     }
     with open(out, "w") as f:
@@ -264,6 +309,10 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
                   f"arena_bytes_per_device_reduction over {mesh_shards} "
                   f"shards, round_overhead="
                   f"{case['sharded_round_overhead']:.2f}x, replay_identical")
+    for name, row in per_strategy.items():
+        print(f"round,strategy_{name},{row['steady_ms'] * 1e3:.0f},"
+              f"engine steady round (1 compile per entry) "
+              f"first_ms={row['first_round_ms']}")
     headline = cases["headline_eval256"]["steady_speedup"]
     print(f"round,result,{headline:.2f},-> {out}")
     if headline < 5:
@@ -276,6 +325,9 @@ if __name__ == "__main__":
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--quick", action="store_true",
                    help="CI smoke: small population, few rounds, no heavy case")
+    p.add_argument("--strategy", default="bfln",
+                   help="strategy for the headline legacy-vs-engine case "
+                        "(the per-strategy sweep always covers all of them)")
     p.add_argument("--n-clients", type=int, default=None)
     p.add_argument("--rounds", type=int, default=None)
     p.add_argument("--mesh-shards", type=int, default=8,
@@ -289,11 +341,12 @@ if __name__ == "__main__":
     if args.sharded_only is not None:
         kw = json.loads(args.sharded_only)
         row = _run(True, kw["n_clients"], kw["sample_frac"], kw["rounds"],
-                   kw["eval_examples"], args.mesh_shards)
+                   kw["eval_examples"], args.mesh_shards,
+                   kw.get("strategy", "bfln"))
         row["balances"] = row["balances"].tolist()    # exact: repr round-trip
         print(json.dumps(row))
         sys.exit(0)
     n = args.n_clients or (200 if args.quick else 1000)
     r = args.rounds or (10 if args.quick else 50)
     main(n_clients=n, rounds=r, out=args.out, heavy_eval=not args.quick,
-         mesh_shards=args.mesh_shards)
+         mesh_shards=args.mesh_shards, strategy=args.strategy)

@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import time
 
-from repro.sim import ClientPopulation, PopulationSpec, SimConfig, SimulatedFederation
+from repro.api import ExperimentSpec
+from repro.sim import ClientPopulation, PopulationSpec, SimulatedFederation
 
 
 def _warm(sim: SimulatedFederation) -> None:
@@ -54,7 +55,8 @@ def _run_case(name: str, n_clients: int, rounds: int, **cfg_kw) -> tuple:
     spec = PopulationSpec(n_clients=n_clients, straggler_frac=0.1,
                           dropout_rate=0.03, byzantine_frac=0.05, seed=0)
     pop = ClientPopulation.from_spec(spec)
-    cfg = SimConfig(rounds=rounds, eval_every=0, seed=0, **cfg_kw)
+    cfg = ExperimentSpec.from_flat(rounds=rounds, eval_every=0, seed=0,
+                                   **cfg_kw)
     sim = SimulatedFederation(pop, cfg)
     _warm(sim)
     t0 = time.perf_counter()

@@ -1,46 +1,62 @@
 """Quickstart: BFLN vs FedAvg on skewed synthetic data in under a minute.
 
+Two entry surfaces, one strategy registry:
+
+  1. the legacy full-participation `FederatedTrainer` (the paper's 20-client
+     protocol, shown below for bfln vs fedavg), and
+  2. the declarative `repro.api.ExperimentSpec` → `run()` one-liner that
+     drives the fused round engine + simulator (see
+     examples/simulate_population.py for the full scenario surface).
+
     PYTHONPATH=src python examples/quickstart.py
 """
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import FederatedTrainer, ModelBundle, make_bfln, make_fedavg
+import repro.api as api
+from repro.core import FederatedTrainer
 from repro.core.fl import evaluate
-from repro.data import dirichlet_partition, make_classification_dataset, pack_clients
-from repro.data.partition import sample_probe_batch
 from repro.models import classifier as clf
 from repro.optim import adam
 
 
 def main():
     n_clients, rounds, bias = 8, 5, 0.1
-    (xt, yt), (xe, ye) = make_classification_dataset("synth10", seed=0)
-    parts = dirichlet_partition(yt, n_clients, bias, seed=0)
-    cx, cy, tx, ty = pack_clients(xt, yt, parts, n_batches=4, batch_size=64)
-    probe = jnp.asarray(sample_probe_batch(xt, yt, category=3, psi=16))
+    data = api.load_packed_clients("synth10", n_clients, bias,
+                                   probe_category=3, psi=16)
+    cfg, bundle = api.make_mlp_bundle(data.in_dim, data.num_classes)
 
-    cfg = clf.MLPConfig(in_dim=64, hidden=(128,), rep_dim=64, num_classes=10)
-    bundle = ModelBundle(functools.partial(clf.apply, cfg),
-                         functools.partial(clf.embed, cfg), 10)
-
-    for name, make in [("bfln", lambda: make_bfln(bundle, probe, n_clusters=3)),
-                       ("fedavg", lambda: make_fedavg(bundle))]:
+    for name in ["bfln", "fedavg"]:
+        strat = api.build_strategy(name, bundle, probe=data.probe,
+                                   n_clusters=3)
         sp = clf.init_stacked(cfg, jax.random.PRNGKey(0), n_clients)
-        tr = FederatedTrainer(bundle, make(), adam(1e-3), local_epochs=3,
+        tr = FederatedTrainer(bundle, strat, adam(1e-3), local_epochs=3,
                               n_clusters=3, use_chain=(name == "bfln"))
-        p = tr.fit(sp, jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(xe),
-                   jnp.asarray(ye), rounds=rounds, log_every=1)
-        pacc = float(jnp.mean(evaluate(bundle.apply_fn, p, jnp.asarray(tx),
-                                       jnp.asarray(ty))))
+        p = tr.fit(sp, data.cx, data.cy, data.test_x, data.test_y,
+                   rounds=rounds, log_every=1)
+        pacc = float(jnp.mean(evaluate(bundle.apply_fn, p,
+                                       jnp.asarray(data.tx),
+                                       jnp.asarray(data.ty))))
         print(f"== {name}: personalized accuracy {pacc:.4f}")
         if name == "bfln":
             print(f"   chain valid={tr.chain.validate()} "
                   f"blocks={len(tr.chain.blocks)} "
                   f"ledger conserved={tr.ledger.conserved()} "
                   f"balances={tr.ledger.balances.round(2).tolist()}")
+
+    # the same comparison as one declarative spec per strategy, through the
+    # fused round engine + event-driven simulator
+    print("\n== declarative API (fused engine + simulator) ==")
+    for name in ["bfln", "fedavg"]:
+        spec = api.ExperimentSpec(
+            data=api.DataSpec(n_clients=64, dataset="synth10", beta=bias,
+                              n_batches=2, batch_size=32),
+            train=api.TrainSpec(strategy=name, rounds=5, sample_frac=0.5,
+                                n_clusters=3, local_epochs=3),
+            eval=api.EvalSpec(every=0))
+        res = api.run(spec)
+        print(f"   {name}: final_acc={res.report.final_accuracy:.4f} "
+              f"config_digest={res.manifest['config_digest'][:12]}")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,22 @@
-"""Population-scale BFLN simulation: sampling, stragglers, dropouts, attacks.
+"""Population-scale simulation: any strategy, sampling, stragglers, attacks.
 
-Runs the event-driven simulator (`repro.sim`) over ≥1000 virtual clients with
-partial participation — the production regime the paper's 20-always-on-client
-protocol cannot express:
+Runs one declarative `repro.api.ExperimentSpec` through `repro.api.run` —
+the event-driven simulator over ≥1000 virtual clients with partial
+participation, with every strategy (BFLN or a Table II baseline) fused into
+the arena-backed round engine:
 
     PYTHONPATH=src python examples/simulate_population.py \
-        --clients 1000 --sample-frac 0.10 --rounds 30 --byzantine-frac 0.05
+        --clients 1000 --sample-frac 0.10 --rounds 30 --byzantine-frac 0.05 \
+        --strategy bfln
 
-Every run is deterministic: the printed event-log digest is a SHA-256 over
-the full (virtual-time, kind, client) event stream — rerun with the same
-seed and the digest, block hashes and final balances reproduce exactly.
+Every run is deterministic and self-describing: the printed manifest stamps
+the spec's config digest plus SHA-256 digests of the event log, block
+hashes and balances — rerun with the same spec and every digest reproduces
+exactly.  ``--spec-json out.json`` dumps the spec; ``--from-spec file``
+replays one.
 
 Finishes in well under 2 minutes on CPU.  Scenario knobs:
+  --strategy bfln|fedavg|fedprox|fedproto|fedhkd
   --straggler-frac / --straggler-slowdown   heavy-tailed client latency
   --dropout-rate                            mid-round client death
   --byzantine-frac                          freeriding hash commitments
@@ -22,26 +27,64 @@ Finishes in well under 2 minutes on CPU.  Scenario knobs:
                                             (CPU devices self-forced)
 """
 import argparse
-import hashlib
-import json
 import time
 
 if __name__ == "__main__":
     # mesh mode needs the forced CPU device count BEFORE jax initialises
-    # (the repro.sim import below) — pre-parse and re-exec once
+    # (the repro.api import below) — pre-parse and re-exec once.  A replayed
+    # spec (--from-spec) carries its mesh width inside the JSON, so peek at
+    # the file here (plain json, no jax import) or the flag would silently
+    # win with its default of 1 and the mesh run could never replay.
+    import json as _json
+
     from repro.launch.bootstrap import force_host_device_count
     _pre = argparse.ArgumentParser(add_help=False)
     _pre.add_argument("--mesh-shards", type=int, default=1)
-    force_host_device_count(_pre.parse_known_args()[0].mesh_shards)
+    _pre.add_argument("--from-spec", default=None)
+    _ns = _pre.parse_known_args()[0]
+    _shards = _ns.mesh_shards
+    if _ns.from_spec:
+        with open(_ns.from_spec) as _f:
+            _d = _json.load(_f)
+        _shards = max(_shards, _d.get("mesh", {}).get("shards", 1))
+    force_host_device_count(_shards)
 
 import numpy as np
 
-from repro.sim import ClientPopulation, PopulationSpec, SimConfig, SimulatedFederation
+import repro.api as api
 
 
-def event_log_digest(event_log) -> str:
-    payload = json.dumps(event_log, sort_keys=False).encode()
-    return hashlib.sha256(payload).hexdigest()
+def build_spec(args) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        data=api.DataSpec(
+            n_clients=args.clients, dataset=args.dataset, beta=args.bias,
+            straggler_frac=args.straggler_frac,
+            straggler_slowdown=args.straggler_slowdown,
+            dropout_rate=args.dropout_rate,
+            byzantine_frac=args.byzantine_frac),
+        train=api.TrainSpec(
+            strategy=args.strategy, rounds=args.rounds,
+            sample_frac=args.sample_frac, n_clusters=args.clusters,
+            local_epochs=args.local_epochs, deadline=args.deadline,
+            sampler=args.sampler, mode=args.mode),
+        async_=api.AsyncSpec(
+            buffer_size=args.buffer_size, concurrency=args.concurrency,
+            staleness_alpha=args.staleness_alpha),
+        eval=api.EvalSpec(every=5),
+        mesh=api.MeshSpec(shards=args.mesh_shards),
+        seed=args.seed)
+
+
+def print_history(res: api.ExperimentResult, mode: str) -> None:
+    for r in res.report.history:
+        acc = f" acc={r.accuracy:.4f}" if np.isfinite(r.accuracy) else ""
+        stale = (f" stale={r.staleness_mean:.2f}" if mode == "async" else
+                 f" strag={r.n_stragglers} drop={r.n_dropouts}")
+        print(f"round {r.round_idx:3d} t={r.t_close:8.1f} "
+              f"k={len(r.cohort):3d} arrived={int(r.arrived.sum()):3d}"
+              f"{stale} byz={r.n_byzantine} prod={r.producer:4d} "
+              f"verified={r.verified_frac:.2f} paid={r.reward_paid:5.1f} "
+              f"burned={r.reward_burned:4.1f} loss={r.mean_loss:.4f}{acc}")
 
 
 def main():
@@ -49,6 +92,8 @@ def main():
     ap.add_argument("--clients", type=int, default=1000)
     ap.add_argument("--dataset", default="synth10")
     ap.add_argument("--bias", type=float, default=0.3)
+    ap.add_argument("--strategy", default="bfln",
+                    choices=api.strategy_names())
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--sample-frac", type=float, default=0.10)
     ap.add_argument("--clusters", type=int, default=5)
@@ -67,73 +112,70 @@ def main():
     ap.add_argument("--mesh-shards", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-async-demo", action="store_true")
+    ap.add_argument("--spec-json", default=None, metavar="PATH",
+                    help="also dump the spec as JSON (reload via --from-spec)")
+    ap.add_argument("--from-spec", default=None, metavar="PATH",
+                    help="ignore the scenario flags and run this spec JSON")
     args = ap.parse_args()
 
     t0 = time.time()
-    spec = PopulationSpec(
-        n_clients=args.clients, dataset=args.dataset, beta=args.bias,
-        straggler_frac=args.straggler_frac,
-        straggler_slowdown=args.straggler_slowdown,
-        dropout_rate=args.dropout_rate, byzantine_frac=args.byzantine_frac,
-        seed=args.seed)
-    pop = ClientPopulation.from_spec(spec)
+    if args.from_spec:
+        with open(args.from_spec) as f:
+            spec = api.ExperimentSpec.from_json(f.read())
+    else:
+        spec = build_spec(args)
+    if args.spec_json:
+        with open(args.spec_json, "w") as f:
+            f.write(spec.to_json(indent=1))
+        print(f"spec -> {args.spec_json}")
+
+    from repro.sim import ClientPopulation
+    pop = ClientPopulation.from_spec(spec.population_spec())
     print(f"population: {pop.n_clients} clients, "
           f"{int(pop.byzantine.sum())} byzantine, "
           f"{int((pop.latency.speed > 1.25).sum())} "   # non-straggler max is 1.25
-          f"stragglers  ({time.time()-t0:.1f}s)")
+          f"stragglers, strategy={spec.train.strategy}  "
+          f"({time.time()-t0:.1f}s)")
 
-    cfg = SimConfig(
-        rounds=args.rounds, sample_frac=args.sample_frac,
-        n_clusters=args.clusters, local_epochs=args.local_epochs,
-        deadline=args.deadline, sampler=args.sampler, mode=args.mode,
-        buffer_size=args.buffer_size, concurrency=args.concurrency,
-        staleness_alpha=args.staleness_alpha, eval_every=5,
-        mesh_shards=args.mesh_shards, seed=args.seed)
-    sim = SimulatedFederation(pop, cfg)
-    rep = sim.run()
+    res = api.run(spec, population=pop)
+    print_history(res, spec.train.mode)
 
-    for r in rep.history:
-        acc = f" acc={r.accuracy:.4f}" if np.isfinite(r.accuracy) else ""
-        stale = (f" stale={r.staleness_mean:.2f}"
-                 if args.mode == "async" else
-                 f" strag={r.n_stragglers} drop={r.n_dropouts}")
-        print(f"round {r.round_idx:3d} t={r.t_close:8.1f} "
-              f"k={len(r.cohort):3d} arrived={int(r.arrived.sum()):3d}"
-              f"{stale} byz={r.n_byzantine} prod={r.producer:4d} "
-              f"verified={r.verified_frac:.2f} paid={r.reward_paid:5.1f} "
-              f"burned={r.reward_burned:4.1f} loss={r.mean_loss:.4f}{acc}")
-
-    print(f"\n{rep.summary()}")
-    print(f"event-log digest: {event_log_digest(rep.event_log)}")
-    top = np.argsort(-rep.balances)[:5]
-    print("top balances:", [(int(i), round(float(rep.balances[i]), 2))
+    print(f"\n{res.report.summary()}")
+    print("manifest:")
+    print(api.format_manifest(res.manifest))
+    balances = res.report.balances
+    top = np.argsort(-balances)[:5]
+    print("top balances:", [(int(i), round(float(balances[i]), 2))
                             for i in top])
-    byz_gain = rep.balances[pop.byzantine] - cfg.initial_stake
     if pop.byzantine.any():
-        print(f"byzantine mean gain: {byz_gain.mean():+.3f}  "
+        stake = spec.chain.initial_stake
+        print(f"byzantine mean gain: "
+              f"{(balances[pop.byzantine] - stake).mean():+.3f}  "
               f"honest mean gain: "
-              f"{(rep.balances[~pop.byzantine] - cfg.initial_stake).mean():+.3f}")
+              f"{(balances[~pop.byzantine] - stake).mean():+.3f}")
     print(f"wall time: {time.time()-t0:.1f}s")
 
-    if args.mode == "sync" and not args.skip_async_demo:
-        print("\n--- async (FedBuff) demo: same population, buffered "
+    if spec.train.mode == "sync" and not args.skip_async_demo:
+        print("\n--- async (FedBuff) demo: same population spec, buffered "
               "staleness-weighted aggregation ---")
-        acfg = SimConfig(rounds=8, mode="async", buffer_size=args.buffer_size,
-                         concurrency=args.concurrency,
-                         staleness_alpha=args.staleness_alpha,
-                         sampler="stake_weighted", local_epochs=args.local_epochs,
-                         n_clusters=args.clusters, eval_every=4, seed=args.seed)
-        apop = ClientPopulation.from_spec(spec)
-        asim = SimulatedFederation(apop, acfg)
-        arep = asim.run()
-        for r in arep.history:
+        aspec = api.ExperimentSpec(
+            data=spec.data,
+            train=api.TrainSpec(
+                strategy=spec.train.strategy, rounds=8, mode="async",
+                sampler="stake_weighted", n_clusters=spec.train.n_clusters,
+                local_epochs=spec.train.local_epochs),
+            async_=api.AsyncSpec(buffer_size=args.buffer_size,
+                                 concurrency=args.concurrency,
+                                 staleness_alpha=args.staleness_alpha),
+            eval=api.EvalSpec(every=4), seed=spec.seed)
+        ares = api.run(aspec)
+        for r in ares.report.history:
             acc = f" acc={r.accuracy:.4f}" if np.isfinite(r.accuracy) else ""
             print(f"flush {r.round_idx:3d} t={r.t_close:8.1f} "
                   f"K={len(r.cohort):3d} stale={r.staleness_mean:.2f} "
                   f"byz={r.n_byzantine} verified={r.verified_frac:.2f} "
                   f"paid={r.reward_paid:5.1f} loss={r.mean_loss:.4f}{acc}")
-        print(arep.summary())
-        print(f"event-log digest: {event_log_digest(arep.event_log)}")
+        print(ares.summary())
         print(f"total wall time: {time.time()-t0:.1f}s")
 
 

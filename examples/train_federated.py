@@ -1,5 +1,7 @@
 """End-to-end BFLN training driver: the paper's full protocol (Fig. 1) with
-blockchain, incentives, checkpointing and resume.
+blockchain, incentives, checkpointing and resume.  ``--strategy`` swaps in
+any registered baseline (the chain engages for bfln only — baselines are
+the paper's chainless comparison points).
 
     PYTHONPATH=src python examples/train_federated.py \
         --dataset synth10 --bias 0.1 --clients 20 --clusters 5 --rounds 50
@@ -9,18 +11,16 @@ lr 1e-3, 5 local epochs, batch 64, ρ=2, stake 5, pool 20) at a round count
 that fits the CPU container; pass --rounds 50 for the paper's full budget.
 """
 import argparse
-import functools
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as api
 from repro.checkpoint import restore_trainer_state, save_trainer_state
-from repro.core import FederatedTrainer, ModelBundle, make_bfln
+from repro.core import FederatedTrainer
 from repro.core.fl import evaluate
-from repro.data import dirichlet_partition, make_classification_dataset, pack_clients
-from repro.data.partition import sample_probe_batch
 from repro.models import classifier as clf
 from repro.optim import adam
 
@@ -31,6 +31,7 @@ def main():
                     choices=["synth10", "synth100", "synthdigits"])
     ap.add_argument("--bias", type=float, default=0.1)
     ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--strategy", default="bfln", choices=api.strategy_names())
     ap.add_argument("--clusters", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=15)
     ap.add_argument("--local-epochs", type=int, default=5)
@@ -41,21 +42,15 @@ def main():
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
-    (xt, yt), (xe, ye) = make_classification_dataset(args.dataset, seed=0)
-    parts = dirichlet_partition(yt, args.clients, args.bias, seed=0)
-    cx, cy, tx, ty = pack_clients(xt, yt, parts, n_batches=4,
-                                  batch_size=args.batch_size)
-    probe = jnp.asarray(sample_probe_batch(xt, yt, category=0, psi=args.psi))
-    num_classes = int(yt.max()) + 1
-
-    cfg = clf.MLPConfig(in_dim=xt.shape[1], hidden=(128,), rep_dim=64,
-                        num_classes=num_classes)
-    bundle = ModelBundle(functools.partial(clf.apply, cfg),
-                         functools.partial(clf.embed, cfg), num_classes)
-    strat = make_bfln(bundle, probe, args.clusters)
+    data = api.load_packed_clients(args.dataset, args.clients, args.bias,
+                                   batch_size=args.batch_size, psi=args.psi)
+    cfg, bundle = api.make_mlp_bundle(data.in_dim, data.num_classes)
+    strat = api.build_strategy(args.strategy, bundle, probe=data.probe,
+                               n_clusters=args.clusters)
     tr = FederatedTrainer(bundle, strat, adam(args.lr),
                           local_epochs=args.local_epochs,
-                          n_clusters=args.clusters)
+                          n_clusters=args.clusters,
+                          use_chain=(args.strategy == "bfln"))
 
     sp = clf.init_stacked(cfg, jax.random.PRNGKey(0), args.clients)
     p, o = tr.init(sp)
@@ -64,26 +59,29 @@ def main():
         p, o, start, extra = restore_trainer_state(args.ckpt)
         print(f"resumed from round {start}")
 
-    cx, cy = jnp.asarray(cx), jnp.asarray(cy)
-    xe, ye = jnp.asarray(xe), jnp.asarray(ye)
+    cx, cy = data.cx, data.cy
+    xe, ye = data.test_x, data.test_y
     for r in range(start, args.rounds):
         p, o, rec = tr.run_round(r, p, o, cx, cy, xe, ye)
-        print(f"round {r:3d} loss={rec.mean_loss:.4f} acc={rec.accuracy:.4f} "
-              f"clusters={rec.cluster_sizes.tolist()} producer={rec.producer} "
-              f"verified={rec.verified_frac:.2f}")
+        chain = (f" clusters={rec.cluster_sizes.tolist()} "
+                 f"producer={rec.producer} verified={rec.verified_frac:.2f}"
+                 if rec.cluster_sizes is not None else "")
+        print(f"round {r:3d} loss={rec.mean_loss:.4f} "
+              f"acc={rec.accuracy:.4f}{chain}")
         if (r + 1) % 5 == 0:
             save_trainer_state(args.ckpt, p, o, r + 1,
                                {"dataset": args.dataset, "bias": args.bias})
 
-    pacc = float(jnp.mean(evaluate(bundle.apply_fn, p, jnp.asarray(tx),
-                                   jnp.asarray(ty))))
+    pacc = float(jnp.mean(evaluate(bundle.apply_fn, p, jnp.asarray(data.tx),
+                                   jnp.asarray(data.ty))))
     print(f"\npersonalized accuracy: {pacc:.4f}")
-    print(f"chain valid: {tr.chain.validate()}  "
-          f"blocks: {len(tr.chain.blocks)}  "
-          f"ledger conserved: {tr.ledger.conserved()}")
-    top = np.argsort(-tr.ledger.balances)[:5]
-    print("top balances:", [(int(i), round(float(tr.ledger.balances[i]), 2))
-                            for i in top])
+    if tr.ledger is not None:
+        print(f"chain valid: {tr.chain.validate()}  "
+              f"blocks: {len(tr.chain.blocks)}  "
+              f"ledger conserved: {tr.ledger.conserved()}")
+        top = np.argsort(-tr.ledger.balances)[:5]
+        print("top balances:",
+              [(int(i), round(float(tr.ledger.balances[i]), 2)) for i in top])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""`repro.api` — the declarative experiment surface.
+
+    from repro.api import ExperimentSpec, TrainSpec, run
+
+    spec = ExperimentSpec(train=TrainSpec(strategy="fedavg", rounds=30))
+    result = run(spec)
+    print(result.summary())          # carries the spec's config_digest
+
+One spec runs any registered strategy (BFLN, FedAvg, FedProx, FedProto,
+FedHKD, or your own via :func:`register_strategy`) through the fused,
+arena-backed round engine, the event-driven simulator, and — with
+``MeshSpec(shards=N)`` — the client-sharded device mesh.  Specs round-trip
+through JSON and stamp a ``config_digest`` into every run manifest.
+"""
+from repro.api.registry import (  # noqa: F401
+    build_strategy,
+    register_strategy,
+    strategy_names,
+)
+from repro.api.runner import (  # noqa: F401
+    ExperimentResult,
+    build_manifest,
+    event_log_digest,
+    format_manifest,
+    run,
+)
+from repro.api.setup import (  # noqa: F401
+    PackedClients,
+    load_packed_clients,
+    make_mlp_bundle,
+)
+from repro.api.spec import (  # noqa: F401
+    AsyncSpec,
+    ChainSpec,
+    DataSpec,
+    EvalSpec,
+    ExperimentSpec,
+    MeshSpec,
+    TrainSpec,
+)

@@ -1,0 +1,76 @@
+"""String-keyed strategy registry: the one place strategies are looked up.
+
+Every federated strategy the system can run — BFLN and the paper's Table II
+baselines — registers a *builder* under a short name.  A builder has the
+uniform signature
+
+    builder(bundle, *, probe, n_clusters, **params) -> Strategy
+
+where ``bundle`` is the :class:`repro.core.ModelBundle`, ``probe`` is the
+PAA probe batch (``None`` for strategies that don't use it), ``n_clusters``
+the PAA/CACC cluster count, and ``params`` strategy-specific
+hyper-parameters (e.g. FedProx ``mu``).  ``ExperimentSpec.train.strategy``
+is validated against this registry at construction, and the simulator /
+fused round engine build their strategy through :func:`build_strategy` — so
+adding a scenario is ``register_strategy("mine", builder)`` plus a spec.
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+from repro.core.baselines import STRATEGY_FACTORIES, Strategy, make_bfln
+
+
+class StrategyBuilder(Protocol):
+    def __call__(self, bundle, *, probe, n_clusters, **params) -> Strategy: ...
+
+
+_REGISTRY: dict[str, StrategyBuilder] = {}
+
+
+def register_strategy(name: str, builder: StrategyBuilder,
+                      overwrite: bool = False) -> None:
+    """Register ``builder`` under ``name`` (ValueError on silent collision)."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"strategy {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[name] = builder
+
+
+def strategy_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def build_strategy(name: str, bundle, *, probe=None, n_clusters: int = 5,
+                   **params) -> Strategy:
+    try:
+        builder = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"registered: {strategy_names()}") from None
+    return builder(bundle, probe=probe, n_clusters=n_clusters, **params)
+
+
+# --------------------------------------------------------------------------- #
+# built-ins: BFLN + the paper's four baselines
+# --------------------------------------------------------------------------- #
+
+def _bfln(bundle, *, probe, n_clusters, **params):
+    if probe is None:
+        raise ValueError("bfln needs a PAA probe batch (probe=...)")
+    if n_clusters < 1:
+        raise ValueError(f"bfln needs n_clusters >= 1, got {n_clusters}")
+    return make_bfln(bundle, probe, n_clusters, **params)
+
+
+def _plain(make: Callable) -> StrategyBuilder:
+    def builder(bundle, *, probe=None, n_clusters=0, **params):
+        return make(bundle, **params)
+    return builder
+
+
+register_strategy("bfln", _bfln)
+# the probe-less baselines come straight from the factory table in
+# repro.core.baselines — ONE list of strategies, not two to keep in sync
+for _name, _make in STRATEGY_FACTORIES.items():
+    register_strategy(_name, _plain(_make))

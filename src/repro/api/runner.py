@@ -1,0 +1,96 @@
+"""`run(spec) -> ExperimentResult` — the one way to run an experiment.
+
+Builds the population from ``spec.data``, drives the event-driven simulator
+(every strategy goes through the fused, arena-backed round engine unless
+``spec.engine=False``), and returns the report together with a *manifest*:
+a flat, JSON-able record stamped with the spec's ``config_digest`` so any
+result can be traced to — and replayed from — the exact configuration that
+produced it.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.api.spec import ExperimentSpec
+from repro.sim import ClientPopulation, SimReport, SimulatedFederation
+
+
+def event_log_digest(event_log) -> str:
+    """SHA-256 over the full (virtual-time, kind, client) event stream —
+    same seed + same spec ⇒ same digest, across engine on/off and mesh
+    widths."""
+    return hashlib.sha256(
+        json.dumps(event_log, sort_keys=False).encode()).hexdigest()
+
+
+@dataclass
+class ExperimentResult:
+    spec: ExperimentSpec
+    report: SimReport
+    manifest: dict[str, Any] = field(default_factory=dict)
+
+    def summary(self) -> str:
+        m = self.manifest
+        return (f"[{m['strategy']}/{m['mode']}] {self.report.summary()} "
+                f"config_digest={m['config_digest'][:12]}")
+
+
+def build_manifest(spec: ExperimentSpec, sim: SimulatedFederation,
+                   report: SimReport) -> dict[str, Any]:
+    """The reproducibility record: config digest first, then everything a
+    replay must reproduce bit for bit."""
+    manifest: dict[str, Any] = {
+        "config_digest": spec.config_digest(),
+        "strategy": spec.train.strategy,
+        "mode": spec.train.mode,
+        "sampler": spec.train.sampler,
+        "engine": spec.engine,
+        "mesh_shards": spec.mesh.shards,
+        "seed": spec.seed,
+        "n_clients": sim.pop.n_clients,
+        "rounds_run": len(report.history),
+        "event_log_digest": event_log_digest(report.event_log),
+        "block_hashes_digest": hashlib.sha256("".join(
+            b.block_hash() for b in sim.trainer.chain.blocks
+        ).encode()).hexdigest(),
+        "n_blocks": report.n_blocks,
+        "chain_valid": report.chain_valid,
+        "ledger_conserved": report.ledger_conserved,
+        "balances_digest": hashlib.sha256(
+            report.balances.tobytes()).hexdigest(),
+        "final_accuracy": report.final_accuracy,
+    }
+    if sim.engine is not None:
+        manifest["engine_compile_counts"] = sim.engine.cache_sizes()
+    return manifest
+
+
+def format_manifest(manifest: dict[str, Any]) -> str:
+    return "\n".join(f"  {k}: {v}" for k, v in manifest.items())
+
+
+def run(spec: ExperimentSpec, population: ClientPopulation | None = None,
+        ) -> ExperimentResult:
+    """Run one experiment end to end.
+
+    ``population`` may be passed explicitly to reuse an already-materialised
+    population across experiments (e.g. strategy sweeps over the same
+    shards); by default it is built from ``spec.data`` with ``spec.seed``.
+    A supplied population must match the spec — the manifest stamps the
+    spec's ``config_digest`` as the replay recipe, which only holds if the
+    population is the one ``spec.data``/``spec.seed`` would rebuild.
+    """
+    if population is None:
+        population = ClientPopulation.from_spec(spec.population_spec())
+    elif population.spec != spec.population_spec():
+        raise ValueError(
+            "supplied population was built from a different PopulationSpec "
+            "than spec.data/spec.seed would rebuild — the manifest's "
+            f"config_digest would not replay this run.\n  population: "
+            f"{population.spec}\n  spec:       {spec.population_spec()}")
+    sim = SimulatedFederation(population, spec)
+    report = sim.run()
+    return ExperimentResult(spec, report, build_manifest(spec, sim, report))

@@ -1,0 +1,64 @@
+"""Shared experiment wiring: dataset packing + model-bundle construction.
+
+The three FL examples (`quickstart`, `train_federated`,
+`simulate_population`) and the benchmark harness used to each carry their
+own copy of the same setup dance — partition a dataset, pack rectangular
+client shards, sample a probe batch, build the MLP ``ModelBundle``.  These
+helpers are that dance, once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import ModelBundle
+from repro.data import dirichlet_partition, make_classification_dataset, pack_clients
+from repro.data.partition import sample_probe_batch
+from repro.models import classifier as clf
+
+
+class PackedClients(NamedTuple):
+    """A partitioned classification dataset, stacked for the vmapped trainer."""
+    cx: jnp.ndarray          # (n, n_batches, B, D) train
+    cy: jnp.ndarray          # (n, n_batches, B)
+    tx: np.ndarray           # (n, n_test, D) per-client local test
+    ty: np.ndarray           # (n, n_test)
+    test_x: jnp.ndarray      # shared global test split
+    test_y: jnp.ndarray
+    probe: jnp.ndarray       # (psi, D) PAA probe batch
+    num_classes: int
+    in_dim: int
+
+
+def load_packed_clients(dataset: str, n_clients: int, bias: float, *,
+                        n_batches: int = 4, batch_size: int = 64,
+                        psi: int = 32, probe_category: int = 0,
+                        seed: int = 0) -> PackedClients:
+    """Dirichlet-partition ``dataset`` into ``n_clients`` rectangular shards
+    plus the shared test split and the PAA probe batch."""
+    (xt, yt), (xe, ye) = make_classification_dataset(dataset, seed=seed)
+    parts = dirichlet_partition(yt, n_clients, bias, seed=seed)
+    cx, cy, tx, ty = pack_clients(xt, yt, parts, n_batches=n_batches,
+                                  batch_size=batch_size, seed=seed)
+    probe = sample_probe_batch(xt, yt, category=probe_category, psi=psi,
+                               seed=seed)
+    return PackedClients(
+        cx=jnp.asarray(cx), cy=jnp.asarray(cy), tx=tx, ty=ty,
+        test_x=jnp.asarray(xe), test_y=jnp.asarray(ye),
+        probe=jnp.asarray(probe),
+        num_classes=int(yt.max()) + 1, in_dim=int(xt.shape[1]))
+
+
+def make_mlp_bundle(in_dim: int, num_classes: int, *,
+                    hidden: tuple[int, ...] = (128,), rep_dim: int = 64,
+                    ) -> tuple[clf.MLPConfig, ModelBundle]:
+    """The FL classifier as (architecture config, architecture-agnostic
+    bundle) — the pair every entry point needs."""
+    cfg = clf.MLPConfig(in_dim=in_dim, hidden=tuple(hidden), rep_dim=rep_dim,
+                        num_classes=num_classes)
+    bundle = ModelBundle(functools.partial(clf.apply, cfg),
+                         functools.partial(clf.embed, cfg), num_classes)
+    return cfg, bundle

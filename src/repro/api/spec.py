@@ -1,0 +1,266 @@
+"""`ExperimentSpec` — ONE declarative description of a BFLN experiment.
+
+The public experiment surface used to be three disjoint entry points: the
+legacy ``FederatedTrainer`` (hand-wired bundle/optimizer/data), the flat
+22-field ``SimConfig`` (BFLN hardcoded), and per-example wiring.  The spec
+nests the flat knobs into six sub-configs —
+
+    data    population: shards, behaviour profiles, latency (→ PopulationSpec)
+    train   the round loop: strategy, rounds, sampling, model width, lr
+    async_  FedBuff buffered aggregation (mode="async" only)
+    eval    metric cadence and sub-sampling
+    chain   blockchain incentives: reward pool, rho, initial stake
+    mesh    client-axis device mesh for the sharded arena
+
+— and is the input to :func:`repro.api.run`.  Every spec round-trips through
+JSON (``from_json(to_json(spec)) == spec``) and hashes to a stable
+``config_digest`` that is stamped into every run manifest, so a result can
+always be traced back to the exact configuration that produced it.
+
+Validation happens at construction: invalid ``mode`` / ``sampler`` /
+``strategy`` / ``mesh_shards`` / fraction values raise ``ValueError``
+immediately instead of failing deep inside the round loop.  The legacy
+``SimConfig`` delegates to the same validators (and still works, with a
+``DeprecationWarning``) — see ``repro.sim.driver``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+def _check_frac(name: str, value: float, *, lo: float = 0.0, hi: float = 1.0,
+                lo_open: bool = False) -> None:
+    ok = (value > lo if lo_open else value >= lo) and value <= hi
+    _check(ok, f"{name} must be in {'(' if lo_open else '['}{lo}, {hi}], "
+               f"got {value!r}")
+
+
+@dataclass(frozen=True)
+class DataSpec:
+    """The virtual client population (mirrors ``repro.sim.PopulationSpec``)."""
+    n_clients: int = 1000
+    dataset: str = "synth10"
+    beta: float = 0.3                 # Dirichlet label-skew concentration
+    n_batches: int = 1
+    batch_size: int = 16
+    availability: float = 0.85
+    dropout_rate: float = 0.03
+    straggler_frac: float = 0.10
+    straggler_slowdown: float = 8.0
+    byzantine_frac: float = 0.0
+    base_latency: float = 10.0
+    latency_sigma: float = 0.25
+    psi: int = 32                     # probe-batch size for PAA
+
+    def __post_init__(self):
+        _check(self.n_clients >= 1, f"n_clients must be >= 1, got {self.n_clients}")
+        for f in ("n_batches", "batch_size", "psi"):
+            _check(getattr(self, f) >= 1, f"{f} must be >= 1, got {getattr(self, f)}")
+        _check(self.beta > 0, f"beta must be > 0, got {self.beta}")
+        _check_frac("availability", self.availability, lo_open=True)
+        for f in ("dropout_rate", "straggler_frac", "byzantine_frac"):
+            _check_frac(f, getattr(self, f))
+        _check(self.straggler_slowdown >= 1.0,
+               f"straggler_slowdown must be >= 1, got {self.straggler_slowdown}")
+        _check(self.base_latency > 0, f"base_latency must be > 0, got {self.base_latency}")
+
+
+@dataclass(frozen=True)
+class TrainSpec:
+    """The round loop: which strategy runs, over whom, for how long."""
+    strategy: str = "bfln"            # repro.api.registry name
+    strategy_params: Mapping[str, Any] = field(default_factory=dict)
+    rounds: int = 20                  # sync rounds, or async buffer flushes
+    sample_frac: float = 0.10
+    n_clusters: int = 5
+    local_epochs: int = 1
+    lr: float = 1e-3
+    deadline: float = 30.0            # virtual seconds per block slot (sync)
+    sampler: str = "uniform"
+    mode: str = "sync"                # "sync" | "async"
+    hidden: tuple[int, ...] = (64,)   # MLP widths of the trained model
+    rep_dim: int = 32
+
+    def __post_init__(self):
+        # strategy membership is checked lazily against the registry so the
+        # spec module stays importable without the strategy factories
+        from repro.api.registry import strategy_names
+        _check(self.strategy in strategy_names(),
+               f"unknown strategy {self.strategy!r}; "
+               f"registered: {strategy_names()}")
+        _check(self.mode in ("sync", "async"),
+               f"mode must be 'sync' or 'async', got {self.mode!r}")
+        from repro.sim.sampler import SAMPLERS
+        _check(self.sampler in SAMPLERS,
+               f"unknown sampler {self.sampler!r}; options: {sorted(SAMPLERS)}")
+        _check_frac("sample_frac", self.sample_frac, lo_open=True)
+        for f in ("rounds", "n_clusters", "local_epochs"):
+            _check(getattr(self, f) >= 1, f"{f} must be >= 1, got {getattr(self, f)}")
+        _check(self.lr > 0, f"lr must be > 0, got {self.lr}")
+        _check(self.deadline > 0, f"deadline must be > 0, got {self.deadline}")
+        _check(self.rep_dim >= 1, f"rep_dim must be >= 1, got {self.rep_dim}")
+        _check(len(self.hidden) >= 1 and all(h >= 1 for h in self.hidden),
+               f"hidden must be a non-empty tuple of widths, got {self.hidden!r}")
+
+
+@dataclass(frozen=True)
+class AsyncSpec:
+    """FedBuff buffered aggregation knobs (``mode='async'`` only)."""
+    buffer_size: int = 16             # flush threshold K
+    staleness_alpha: float = 0.5      # w(s) = (1+s)^-alpha
+    server_lr: float = 1.0            # global += lr · merged delta
+    concurrency: int = 64             # target in-flight clients
+
+    def __post_init__(self):
+        _check(self.buffer_size >= 1, f"buffer_size must be >= 1, got {self.buffer_size}")
+        _check(self.concurrency >= 1, f"concurrency must be >= 1, got {self.concurrency}")
+        _check(self.staleness_alpha >= 0,
+               f"staleness_alpha must be >= 0, got {self.staleness_alpha}")
+        _check(self.server_lr > 0, f"server_lr must be > 0, got {self.server_lr}")
+
+
+@dataclass(frozen=True)
+class EvalSpec:
+    every: int = 5                    # 0 = only final eval
+    clients: int = 128                # population sub-sample for evaluation
+    examples: int = 1024              # shared-test sub-sample for evaluation
+
+    def __post_init__(self):
+        _check(self.every >= 0, f"every must be >= 0, got {self.every}")
+        _check(self.clients >= 1, f"clients must be >= 1, got {self.clients}")
+        _check(self.examples >= 1, f"examples must be >= 1, got {self.examples}")
+
+
+@dataclass(frozen=True)
+class ChainSpec:
+    """Blockchain incentives (paper Table I)."""
+    total_reward: float = 20.0
+    rho: float = 2.0
+    initial_stake: float = 5.0
+
+    def __post_init__(self):
+        _check(self.total_reward >= 0, f"total_reward must be >= 0, got {self.total_reward}")
+        _check(self.rho >= 0, f"rho must be >= 0, got {self.rho}")
+        _check(self.initial_stake >= 0, f"initial_stake must be >= 0, got {self.initial_stake}")
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Client-axis device mesh for the row-sharded parameter arena."""
+    shards: int = 1
+
+    def __post_init__(self):
+        _check(isinstance(self.shards, int) and self.shards >= 1,
+               f"mesh shards must be an int >= 1, got {self.shards!r}")
+
+
+_SUB_SPECS = {"data": DataSpec, "train": TrainSpec, "async_": AsyncSpec,
+              "eval": EvalSpec, "chain": ChainSpec, "mesh": MeshSpec}
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One experiment, declaratively: ``run(spec) -> ExperimentResult``."""
+    data: DataSpec = field(default_factory=DataSpec)
+    train: TrainSpec = field(default_factory=TrainSpec)
+    async_: AsyncSpec = field(default_factory=AsyncSpec)
+    eval: EvalSpec = field(default_factory=EvalSpec)
+    chain: ChainSpec = field(default_factory=ChainSpec)
+    mesh: MeshSpec = field(default_factory=MeshSpec)
+    engine: bool = True               # arena-backed fused round engine
+    seed: int = 0
+
+    def __post_init__(self):
+        # cross-field constraint (was a deep-in-the-driver failure before)
+        _check(self.mesh.shards == 1 or self.engine,
+               "mesh shards > 1 requires engine=True (the legacy oracle "
+               "driver is single-device only)")
+
+    # ------------------------------------------------------------------ #
+    # conversions
+    # ------------------------------------------------------------------ #
+
+    def population_spec(self):
+        """The ``repro.sim.PopulationSpec`` this experiment's population uses
+        (seeded with the experiment seed)."""
+        from repro.sim.population import PopulationSpec
+        return PopulationSpec(**dataclasses.asdict(self.data), seed=self.seed)
+
+    def sim_config(self):
+        """Flat legacy view (``repro.sim.SimConfig``) consumed by the round
+        loop; constructed without the deprecation warning."""
+        from repro.sim.driver import SimConfig
+        t, a, e, c = self.train, self.async_, self.eval, self.chain
+        return SimConfig._internal(
+            rounds=t.rounds, sample_frac=t.sample_frac,
+            n_clusters=t.n_clusters, local_epochs=t.local_epochs, lr=t.lr,
+            deadline=t.deadline, sampler=t.sampler, mode=t.mode,
+            strategy=t.strategy, strategy_params=dict(t.strategy_params),
+            buffer_size=a.buffer_size, staleness_alpha=a.staleness_alpha,
+            server_lr=a.server_lr, concurrency=a.concurrency,
+            total_reward=c.total_reward, rho=c.rho,
+            initial_stake=c.initial_stake, eval_every=e.every,
+            eval_clients=e.clients, eval_examples=e.examples,
+            hidden=tuple(t.hidden), rep_dim=t.rep_dim, engine=self.engine,
+            mesh_shards=self.mesh.shards, seed=self.seed)
+
+    @classmethod
+    def from_flat(cls, data: DataSpec | None = None, **flat) -> "ExperimentSpec":
+        """Build a nested spec from flat ``SimConfig``-style kwargs — the
+        migration path for CLIs and benchmarks that accumulate flat knobs."""
+        from repro.sim.driver import SimConfig
+        return SimConfig._internal(**flat).to_spec(data=data)
+
+    # ------------------------------------------------------------------ #
+    # JSON round trip + digest
+    # ------------------------------------------------------------------ #
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["train"]["hidden"] = list(self.train.hidden)
+        d["train"]["strategy_params"] = dict(self.train.strategy_params)
+        return d
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        if "async" in d:                      # friendly alias for the
+            d["async_"] = d.pop("async")      # keyword-escaped field name
+        unknown = set(d) - set(_SUB_SPECS) - {"engine", "seed"}
+        if unknown:
+            # silently dropping a misspelt section would run defaults under a
+            # digest the author never configured — reject loudly instead
+            raise ValueError(
+                f"unknown spec section(s) {sorted(unknown)}; expected "
+                f"{sorted(_SUB_SPECS)} + ['engine', 'seed']")
+        kw: dict[str, Any] = {}
+        for name, sub_cls in _SUB_SPECS.items():
+            sub = dict(d.get(name, {}))
+            if name == "train" and "hidden" in sub:
+                sub["hidden"] = tuple(sub["hidden"])
+            kw[name] = sub_cls(**sub)
+        for name in ("engine", "seed"):
+            if name in d:
+                kw[name] = d[name]
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    def config_digest(self) -> str:
+        """Stable SHA-256 over the canonical JSON form — the reproducibility
+        stamp every run manifest carries."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()

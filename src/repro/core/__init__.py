@@ -9,6 +9,7 @@
 """
 from repro.core.aggregation import PAAResult, cluster_mean_params, paa_round  # noqa: F401
 from repro.core.baselines import (  # noqa: F401
+    CohortAggOut,
     ModelBundle,
     Strategy,
     make_bfln,

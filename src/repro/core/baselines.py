@@ -1,15 +1,27 @@
 """Federated learning strategies: the paper's four baselines + BFLN itself.
 
-A :class:`Strategy` is a triple of pure functions consumed by
-``repro.core.round``:
+A :class:`Strategy` is a bundle of pure functions consumed by
+``repro.core.round`` (the legacy full-participation trainer) and
+``repro.core.engine`` (the fused, arena-backed round engine):
 
     round_extras(stacked_params, cx, cy) -> extras   # what the server ships
     local_loss(params, x, y, extras) -> scalar       # client objective
     aggregate(stacked_params, cx, cy) -> AggOut      # server aggregation
+    aggregate_cohort(stacked_params, cx, cy, arrived_w) -> CohortAggOut
 
 ``extras`` always carries a leading client axis (it is vmapped alongside the
 client during local training).  Every baseline is a real implementation, not a
 stub — the paper compares against all four in Table II.
+
+``aggregate_cohort`` is the *engine-facing* aggregation stage: jittable,
+fixed-shape, and mask-weighted.  ``arrived_w`` is a (k,) 0/1 float arrival
+mask over the cohort slots — slots that missed the round contribute zero
+aggregation weight but still occupy their slot (no dynamic shapes, so the
+fused round program compiles exactly once per cohort size).  Every strategy
+also returns a ``(k,)`` cluster-label vector and a ``(k, k)`` affinity
+matrix for the blockchain's CACC consensus: BFLN computes them from its PAA
+pipeline; flat strategies report the single-cluster view (zeros / identity),
+exactly like the async FedBuff path always has.
 """
 from __future__ import annotations
 
@@ -18,8 +30,10 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import paa_round
-from repro.core.prototypes import classwise_prototypes
+from repro.core.aggregation import cluster_mean_params, paa_round
+from repro.core.pearson import pearson_affinity, pearson_matrix
+from repro.core.prototypes import classwise_prototypes, client_prototypes
+from repro.core.spectral import spectral_cluster
 from repro.utils.tree import tree_sq_norm, tree_sub
 
 Pytree = Any
@@ -39,11 +53,22 @@ class AggOut(NamedTuple):
     corr: jax.Array | None = None            # Pearson matrix (BFLN only)
 
 
+class CohortAggOut(NamedTuple):
+    """Engine-facing aggregation output (all fixed-shape, jit-friendly)."""
+    stacked_params: Pytree       # (k, ...) per-slot aggregated params
+    labels: jax.Array            # (k,) cluster assignment (zeros if unclustered)
+    corr: jax.Array              # (k, k) affinity for CACC (eye if unclustered)
+
+
 class Strategy(NamedTuple):
     name: str
     round_extras: Callable[[Pytree, jax.Array, jax.Array], Any]
     local_loss: Callable[[Pytree, jax.Array, jax.Array, Any], jax.Array]
     aggregate: Callable[[Pytree, jax.Array, jax.Array], AggOut]
+    # jittable mask-weighted aggregation consumed by the fused round engine;
+    # (stacked_params, cx, cy, arrived_w) -> CohortAggOut
+    aggregate_cohort: Callable[
+        [Pytree, jax.Array, jax.Array, jax.Array], "CohortAggOut"] | None = None
 
 
 def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
@@ -63,6 +88,31 @@ def _global_mean(stacked_params: Pytree) -> Pytree:
     return jax.tree.map(lambda g: jnp.broadcast_to(g[None], (m,) + g.shape), mean)
 
 
+def _masked_mean(stacked_params: Pytree, arrived_w: jax.Array) -> Pytree:
+    """Mask-weighted global mean, broadcast back to every cohort slot.
+
+    The fixed-shape form of FedAvg under partial participation: slots with
+    zero arrival weight contribute nothing, and the denominator is the
+    arrived count (clamped, so an empty round degrades to zeros harmlessly —
+    the engine's scatter mask drops those rows anyway).
+    """
+    w = arrived_w.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+
+    def leaf(x):
+        wx = x.astype(jnp.float32) * w.reshape((-1,) + (1,) * (x.ndim - 1))
+        mean = jnp.sum(wx, axis=0) / denom
+        return jnp.broadcast_to(mean[None], x.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked_params)
+
+
+def _single_cluster_view(m: int) -> tuple[jax.Array, jax.Array]:
+    """CACC inputs for unclustered strategies: one cluster, identity affinity
+    — the exact view the async FedBuff path has always fed the chain."""
+    return jnp.zeros((m,), jnp.int32), jnp.eye(m, dtype=jnp.float32)
+
+
 # --------------------------------------------------------------------------- #
 # FedAvg (McMahan et al., 2017)
 # --------------------------------------------------------------------------- #
@@ -78,7 +128,12 @@ def make_fedavg(model: ModelBundle) -> Strategy:
     def aggregate(stacked_params, cx, cy):
         return AggOut(_global_mean(stacked_params))
 
-    return Strategy("fedavg", round_extras, local_loss, aggregate)
+    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
+        return CohortAggOut(_masked_mean(stacked_params, arrived_w),
+                            *_single_cluster_view(cx.shape[0]))
+
+    return Strategy("fedavg", round_extras, local_loss, aggregate,
+                    aggregate_cohort)
 
 
 # --------------------------------------------------------------------------- #
@@ -97,7 +152,12 @@ def make_fedprox(model: ModelBundle, mu: float = 0.01) -> Strategy:
     def aggregate(stacked_params, cx, cy):
         return AggOut(_global_mean(stacked_params))
 
-    return Strategy("fedprox", round_extras, local_loss, aggregate)
+    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
+        return CohortAggOut(_masked_mean(stacked_params, arrived_w),
+                            *_single_cluster_view(cx.shape[0]))
+
+    return Strategy("fedprox", round_extras, local_loss, aggregate,
+                    aggregate_cohort)
 
 
 # --------------------------------------------------------------------------- #
@@ -135,7 +195,13 @@ def make_fedproto(model: ModelBundle, lam: float = 1.0) -> Strategy:
     def aggregate(stacked_params, cx, cy):
         return AggOut(stacked_params)  # models are never averaged
 
-    return Strategy("fedproto", round_extras, local_loss, aggregate)
+    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
+        # personal models: arrived slots keep their freshly trained params
+        # (the engine's scatter mask drops non-arrived rows on its own)
+        return CohortAggOut(stacked_params, *_single_cluster_view(cx.shape[0]))
+
+    return Strategy("fedproto", round_extras, local_loss, aggregate,
+                    aggregate_cohort)
 
 
 # --------------------------------------------------------------------------- #
@@ -183,7 +249,12 @@ def make_fedhkd(model: ModelBundle, lam_rep: float = 0.05,
     def aggregate(stacked_params, cx, cy):
         return AggOut(_global_mean(stacked_params))
 
-    return Strategy("fedhkd", round_extras, local_loss, aggregate)
+    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
+        return CohortAggOut(_masked_mean(stacked_params, arrived_w),
+                            *_single_cluster_view(cx.shape[0]))
+
+    return Strategy("fedhkd", round_extras, local_loss, aggregate,
+                    aggregate_cohort)
 
 
 # --------------------------------------------------------------------------- #
@@ -206,7 +277,20 @@ def make_bfln(model: ModelBundle, probe_x: jax.Array, n_clusters: int,
                         kmeans_iters=kmeans_iters)
         return AggOut(res.new_stacked_params, res.labels, res.cluster_sizes, res.corr)
 
-    return Strategy("bfln", round_extras, local_loss, aggregate)
+    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
+        # the exact op sequence the fused engine has always traced (PAA with
+        # the arrival mask as aggregation weights) — op-for-op identical so
+        # seeded BFLN replay stays bit-identical to the pre-generic engine
+        protos = client_prototypes(model.embed_fn, stacked_params, probe_x)
+        corr = pearson_matrix(protos)
+        labels = spectral_cluster(pearson_affinity(corr), n_clusters,
+                                  kmeans_iters)
+        new_params = cluster_mean_params(stacked_params, labels, n_clusters,
+                                         weights=arrived_w)
+        return CohortAggOut(new_params, labels, corr)
+
+    return Strategy("bfln", round_extras, local_loss, aggregate,
+                    aggregate_cohort)
 
 
 STRATEGY_FACTORIES = {

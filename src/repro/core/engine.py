@@ -10,9 +10,17 @@ jit recompile per distinct count.
 The engine collapses all of it into ONE jitted, ``donate_argnums``-donated
 program per (mode, cohort_size):
 
-    arena gather → local_train → PAA (prototypes, Pearson, spectral,
-    cluster-masked mean) → cohort fingerprint residues →
+    arena gather → local_train → strategy.aggregate_cohort (BFLN: PAA —
+    prototypes, Pearson, spectral, cluster-masked mean; baselines:
+    mask-weighted means / personal models) → cohort fingerprint residues →
     masked scatter-back into the donated arena
+
+The engine is **strategy-generic**: every registered strategy
+(`repro.api.registry`) fuses into the same donated step through its
+``aggregate_cohort`` stage — BFLN keeps its exact PAA op sequence (seeded
+replay stays bit-identical to the BFLN-only engine), while the Table II
+baselines get fixed-shape mask-weighted aggregation and the single-cluster
+CACC view (labels = zeros, affinity = identity).
 
 Arrival is a fixed-shape mask everywhere — no ``np.flatnonzero`` dynamic
 indexing, no varying leading dims — so the jit cache hits every round and
@@ -45,11 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import cluster_mean_params
 from repro.core.fl import local_train
-from repro.core.pearson import pearson_affinity, pearson_matrix
-from repro.core.prototypes import client_prototypes
-from repro.core.spectral import spectral_cluster
 from repro.kernels.fingerprint import fingerprint_rows, format_digest
 from repro.runtime.arena import ArenaLayout, bitcast_u32
 
@@ -82,18 +86,21 @@ class RoundEngine:
         layout: ArenaLayout,
         *,
         apply_fn: Callable,
-        embed_fn: Callable,
         strategy,                       # repro.core.baselines.Strategy
         opt,                            # repro.optim.Optimizer
-        probe: jax.Array,
         n_clusters: int,
         local_epochs: int,
-        kmeans_iters: int = 25,
         stacked_apply_fn: Callable | None = None,
         sharding=None,                  # client-axis NamedSharding (mesh mode)
     ):
+        if strategy.aggregate_cohort is None:
+            raise ValueError(
+                f"strategy {strategy.name!r} has no aggregate_cohort stage — "
+                "the fused round engine needs the jittable mask-weighted "
+                "aggregation (see repro.core.baselines.Strategy)")
         self.layout = layout
         self.n_clusters = n_clusters
+        self.strategy_name = strategy.name
         self.sharding = sharding
         if sharding is not None:
             from jax.sharding import NamedSharding, PartitionSpec
@@ -133,29 +140,25 @@ class RoundEngine:
             # replicated block (O(k·N) bytes), never the arena
             rows = _rep(arena[cohort_idx])
             res = _train(layout.unflatten(rows), cx, cy)
-            # PAA over ALL cohort slots (stragglers burn local compute too);
-            # only the aggregation weights honour the arrival mask
-            protos = client_prototypes(embed_fn, res.params, probe)
-            corr = pearson_matrix(protos)
-            labels = spectral_cluster(pearson_affinity(corr), n_clusters,
-                                      kmeans_iters)
+            # aggregation over ALL cohort slots (stragglers burn local compute
+            # too); only the aggregation weights honour the arrival mask.
+            # BFLN's stage keeps cluster-masked FedAvg per-leaf (same dot
+            # shapes as the legacy driver -> same GEMM blocking ->
+            # bit-identical replay at every cohort size; the flat
+            # `cluster_mean_rows` form is the same math but a (C,k)x(k,N)
+            # contraction blocks differently at k≈100 — it remains the TPU
+            # cluster_agg kernel path).
+            agg = strategy.aggregate_cohort(res.params, cx, cy, arrived)
             local_rows = layout.flatten(res.params)
             residues = fingerprint_rows(bitcast_u32(local_rows))
-            # cluster-masked FedAvg stays per-leaf (same dot shapes as the
-            # legacy driver -> same GEMM blocking -> bit-identical replay at
-            # every cohort size; the flat `cluster_mean_rows` form is the
-            # same math but a (C,k)x(k,N) contraction blocks differently at
-            # k≈100).  The flat form remains the TPU cluster_agg kernel path.
-            new_params = cluster_mean_params(res.params, labels, n_clusters,
-                                             weights=arrived)
-            new_rows = layout.flatten(new_params)
-            # masked scatter-back: arrived slots adopt their cluster mean,
-            # everyone else keeps their previous personalized row
+            new_rows = layout.flatten(agg.stacked_params)
+            # masked scatter-back: arrived slots adopt their aggregated
+            # params, everyone else keeps their previous personalized row
             upd = jnp.where(arrived[:, None] > 0, new_rows, rows)
             # mesh mode: each device scatters only into the rows it owns, so
             # the donated arena stays row-sharded end to end
             arena = _shd(arena.at[cohort_idx].set(upd))
-            return arena, SyncRoundOut(labels, corr, residues,
+            return arena, SyncRoundOut(agg.labels, agg.corr, residues,
                                        jnp.mean(res.mean_loss), upd)
 
         def _async_step(base_rows, cx, cy):

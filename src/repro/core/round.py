@@ -66,10 +66,16 @@ class ChainRoundResult:
 
 @dataclass
 class FederatedTrainer:
-    """Runs strategy rounds over stacked clients; BFLN adds the chain."""
+    """Runs strategy rounds over stacked clients; BFLN adds the chain.
+
+    ``strategy`` may be a built :class:`Strategy` or a registry name
+    (`repro.api.registry`) — a string is resolved at construction against
+    ``model``/``probe``/``n_clusters``, so
+    ``FederatedTrainer(bundle, "fedprox", opt)`` just works.
+    """
 
     model: ModelBundle
-    strategy: Strategy
+    strategy: Strategy | str
     opt: Optimizer
     local_epochs: int = 5
     n_clusters: int = 0              # >0 enables CACC/chain (BFLN)
@@ -77,9 +83,15 @@ class FederatedTrainer:
     rho: float = 2.0                 # paper Table I
     initial_stake: float = 5.0       # paper Table I
     use_chain: bool = True
+    probe: Any = None                # PAA probe batch (name-resolved bfln)
     history: list[RoundRecord] = field(default_factory=list)
 
     def __post_init__(self):
+        if isinstance(self.strategy, str):
+            from repro.api.registry import build_strategy
+            self.strategy = build_strategy(
+                self.strategy, self.model, probe=self.probe,
+                n_clusters=self.n_clusters)
         self.chain = Blockchain()
         self.pool = TxPool()
         self.ledger: TokenLedger | None = None

@@ -1,7 +1,13 @@
 """`SimulatedFederation` — event-driven federation over a virtual population.
 
 Layers realistic client dynamics (sampling, stragglers, dropouts, Byzantine
-freeriders) on top of the existing BFLN machinery.  Per synchronous round:
+freeriders) on top of the existing BFLN machinery.  The driver is
+strategy-generic: the experiment's strategy (BFLN or any registered
+baseline, `repro.api.registry`) supplies both the local objective and the
+jittable mask-weighted ``aggregate_cohort`` stage the fused round engine
+traces.  Configuration arrives as a nested `repro.api.ExperimentSpec` (the
+canonical form, see `repro.api.run`) or the flat legacy :class:`SimConfig`
+(deprecated shim).  Per synchronous round:
 
     1. availability draw → online pool → sampler picks the cohort,
     2. cohort events scheduled on the virtual clock (arrival, update-ready
@@ -45,6 +51,7 @@ mismatch.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -53,8 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.blockchain import TokenLedger
-from repro.core import FederatedTrainer, ModelBundle, digest_of, make_bfln
-from repro.core.aggregation import paa_round
+from repro.core import FederatedTrainer, ModelBundle, digest_of
 from repro.core.engine import RoundEngine
 from repro.core.fl import global_evaluate, local_train
 from repro.models import classifier as clf
@@ -76,8 +82,19 @@ from repro.utils.tree import tree_index, tree_stack
 Pytree = Any
 
 
+_SIMCONFIG_INTERNAL = False    # True while repro.api builds the flat view
+
+
 @dataclass(frozen=True)
 class SimConfig:
+    """Flat legacy experiment config.
+
+    .. deprecated::
+        Build a nested :class:`repro.api.ExperimentSpec` instead (and run it
+        with :func:`repro.api.run`).  ``SimConfig(...)`` keeps working as a
+        shim: it validates, maps onto the nested spec via :meth:`to_spec`,
+        and ``SimulatedFederation`` accepts either form.
+    """
     rounds: int = 20                  # sync rounds, or async buffer flushes
     sample_frac: float = 0.10
     n_clusters: int = 5
@@ -86,6 +103,8 @@ class SimConfig:
     deadline: float = 30.0            # virtual seconds per block slot (sync)
     sampler: str = "uniform"
     mode: str = "sync"                # "sync" | "async"
+    strategy: str = "bfln"            # repro.api.registry name
+    strategy_params: dict = field(default_factory=dict)
     buffer_size: int = 16             # async: flush threshold K
     staleness_alpha: float = 0.5      # async: w(s) = (1+s)^-alpha
     server_lr: float = 1.0            # async: global += lr · merged delta
@@ -104,6 +123,66 @@ class SimConfig:
                                       # CPU force devices with XLA_FLAGS=
                                       # --xla_force_host_platform_device_count=N
     seed: int = 0
+
+    def __post_init__(self):
+        # ONE source of validation truth: building the nested spec runs every
+        # sub-spec's __post_init__ (mode/sampler/strategy membership,
+        # fractions, positivity, the mesh-requires-engine cross check) — a
+        # bad value raises ValueError here, at construction, never deep
+        # inside the round loop
+        self.to_spec()
+        if not _SIMCONFIG_INTERNAL:
+            warnings.warn(
+                "SimConfig is deprecated; build a nested "
+                "repro.api.ExperimentSpec and run it with repro.api.run() "
+                "(SimConfig(...) keeps working as a shim via .to_spec())",
+                DeprecationWarning, stacklevel=3)
+
+    @classmethod
+    def _internal(cls, **kw) -> "SimConfig":
+        """Construct the flat view without the deprecation warning (used by
+        ``ExperimentSpec.sim_config()``); validation still runs."""
+        global _SIMCONFIG_INTERNAL
+        prev, _SIMCONFIG_INTERNAL = _SIMCONFIG_INTERNAL, True
+        try:
+            return cls(**kw)
+        finally:
+            _SIMCONFIG_INTERNAL = prev
+
+    def to_spec(self, data=None):
+        """The equivalent nested :class:`repro.api.ExperimentSpec` (the
+        old-kwargs → new-spec mapping the compat test pins).  ``data`` may
+        supply a :class:`repro.api.DataSpec`; population-less callers (the
+        common case — they pass a materialised population) get defaults."""
+        from repro.api.spec import (
+            AsyncSpec,
+            ChainSpec,
+            DataSpec,
+            EvalSpec,
+            ExperimentSpec,
+            MeshSpec,
+            TrainSpec,
+        )
+        return ExperimentSpec(
+            data=data if data is not None else DataSpec(),
+            train=TrainSpec(
+                strategy=self.strategy,
+                strategy_params=dict(self.strategy_params),
+                rounds=self.rounds, sample_frac=self.sample_frac,
+                n_clusters=self.n_clusters, local_epochs=self.local_epochs,
+                lr=self.lr, deadline=self.deadline, sampler=self.sampler,
+                mode=self.mode, hidden=tuple(self.hidden),
+                rep_dim=self.rep_dim),
+            async_=AsyncSpec(
+                buffer_size=self.buffer_size,
+                staleness_alpha=self.staleness_alpha,
+                server_lr=self.server_lr, concurrency=self.concurrency),
+            eval=EvalSpec(every=self.eval_every, clients=self.eval_clients,
+                          examples=self.eval_examples),
+            chain=ChainSpec(total_reward=self.total_reward, rho=self.rho,
+                            initial_stake=self.initial_stake),
+            mesh=MeshSpec(shards=self.mesh_shards),
+            engine=self.engine, seed=self.seed)
 
 
 @dataclass
@@ -150,21 +229,40 @@ class SimReport:
 
 class SimulatedFederation:
     """Drives `FederatedTrainer` round logic over sampled cohorts of a
-    virtual client population, on a deterministic virtual clock."""
+    virtual client population, on a deterministic virtual clock.
 
-    def __init__(self, population: ClientPopulation, config: SimConfig):
+    ``config`` may be a nested :class:`repro.api.ExperimentSpec` (the
+    canonical form) or a flat legacy :class:`SimConfig`; both normalise to
+    the same pair (``self.spec``, ``self.cfg``).  The strategy is resolved
+    by name through :mod:`repro.api.registry`, so any registered strategy —
+    BFLN or a Table II baseline — runs through the fused round engine, the
+    simulator, and the sharded mesh.
+    """
+
+    def __init__(self, population: ClientPopulation, config):
+        from repro.api.registry import build_strategy
+        from repro.api.spec import ExperimentSpec
+        if isinstance(config, ExperimentSpec):
+            self.spec = config
+            config = config.sim_config()
+        else:
+            self.spec = config.to_spec()
         self.pop = population
         self.cfg = config
         n = population.n_clients
 
-        mcfg = clf.MLPConfig(in_dim=population.in_dim, hidden=config.hidden,
+        mcfg = clf.MLPConfig(in_dim=population.in_dim,
+                             hidden=tuple(config.hidden),
                              rep_dim=config.rep_dim,
                              num_classes=population.num_classes)
         self.bundle = ModelBundle(functools.partial(clf.apply, mcfg),
                                   functools.partial(clf.embed, mcfg),
                                   population.num_classes)
         self.opt = adam(config.lr)
-        strat = make_bfln(self.bundle, population.probe, config.n_clusters)
+        strat = build_strategy(config.strategy, self.bundle,
+                               probe=population.probe,
+                               n_clusters=config.n_clusters,
+                               **config.strategy_params)
         self.trainer = FederatedTrainer(
             self.bundle, strat, self.opt, local_epochs=config.local_epochs,
             n_clusters=config.n_clusters, total_reward=config.total_reward,
@@ -190,14 +288,9 @@ class SimulatedFederation:
 
         strategy = strat
         opt = self.opt
-        embed_fn = self.bundle.embed_fn
-        probe = population.probe
         n_clusters = config.n_clusters
         epochs = config.local_epochs
 
-        if config.mesh_shards > 1 and not config.engine:
-            raise ValueError("mesh_shards > 1 requires engine=True (the "
-                             "legacy oracle driver is single-device only)")
         if config.engine:
             # flatten the population ONCE into the (n, N) arena; all round
             # state now lives as donated rows of this matrix.  mesh_shards>1
@@ -212,7 +305,7 @@ class SimulatedFederation:
             self._params = None
             self.engine = RoundEngine(
                 self.arena.layout, apply_fn=self.bundle.apply_fn,
-                embed_fn=embed_fn, strategy=strategy, opt=opt, probe=probe,
+                strategy=strategy, opt=opt,
                 n_clusters=n_clusters, local_epochs=epochs,
                 stacked_apply_fn=functools.partial(clf.apply_stacked, mcfg),
                 sharding=getattr(self.arena, "sharding", None))
@@ -222,14 +315,14 @@ class SimulatedFederation:
         @jax.jit
         def _cohort_round(cohort_params, cx, cy, arrived_w):
             """Local training (fresh per-round optimizer, standard for sampled
-            cohorts) + PAA aggregation weighted by the arrival mask."""
+            cohorts) + the strategy's cohort aggregation weighted by the
+            arrival mask (BFLN: the PAA pipeline)."""
             opt_state = jax.vmap(opt.init)(cohort_params)
             extras = strategy.round_extras(cohort_params, cx, cy)
             res = local_train(strategy.local_loss, opt, cohort_params,
                               opt_state, cx, cy, extras, epochs)
-            paa = paa_round(embed_fn, res.params, probe, n_clusters,
-                            weights=arrived_w)
-            return res.params, paa, jnp.mean(res.mean_loss)
+            agg = strategy.aggregate_cohort(res.params, cx, cy, arrived_w)
+            return res.params, agg, jnp.mean(res.mean_loss)
 
         self._cohort_round = _cohort_round
 
@@ -366,18 +459,18 @@ class SimulatedFederation:
         else:
             cohort_params = jax.tree.map(lambda x: x[jnp.asarray(cohort)],
                                          self._params)
-            local_params, paa, mean_loss = self._cohort_round(
+            local_params, agg, mean_loss = self._cohort_round(
                 cohort_params, cx, cy, arrived_w)
-            labels_dev = paa.labels
+            labels_dev = agg.labels
             cres = self.trainer.chain_round(
-                r, local_params, paa.labels, paa.corr, cohort=cohort,
+                r, local_params, agg.labels, agg.corr, cohort=cohort,
                 arrived=arrived, tamper=self._tampers(cohort, arrived))
 
-            # arrived clients adopt their cluster-aggregated model; stragglers
-            # and dropouts keep their previous personalized params
+            # arrived clients adopt their aggregated model; stragglers and
+            # dropouts keep their previous personalized params
             new_rows = jax.tree.map(
                 lambda x: x[jnp.asarray(np.flatnonzero(arrived))],
-                paa.new_stacked_params)
+                agg.stacked_params)
             upd_ids = jnp.asarray(np.asarray(cohort)[arrived])
             self._params = jax.tree.map(
                 lambda P, rows: P.at[upd_ids].set(rows),

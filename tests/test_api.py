@@ -1,0 +1,243 @@
+"""The declarative experiment API: spec JSON round-trip + config digest,
+construction-time validation, the SimConfig deprecation shim (old kwargs →
+new nested spec equivalence), the strategy registry, and run() manifests."""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.sim import SimConfig, SimulatedFederation
+
+
+def _spec(**kw):
+    defaults = dict(
+        data=api.DataSpec(n_clients=40, n_batches=1, batch_size=16,
+                          byzantine_frac=0.1),
+        train=api.TrainSpec(strategy="fedavg", rounds=2, sample_frac=0.3,
+                            n_clusters=3),
+        eval=api.EvalSpec(every=1, examples=128),
+        seed=7)
+    defaults.update(kw)
+    return api.ExperimentSpec(**defaults)
+
+
+# --------------------------------------------------------------------------- #
+# spec: JSON round trip + digest
+# --------------------------------------------------------------------------- #
+
+def test_spec_json_round_trip():
+    for spec in (api.ExperimentSpec(), _spec(),
+                 _spec(train=api.TrainSpec(
+                     strategy="fedprox", strategy_params={"mu": 0.1},
+                     mode="async", hidden=(32, 16)))):
+        assert api.ExperimentSpec.from_json(spec.to_json()) == spec
+        # dict form is plain JSON types (tuples normalised away)
+        assert json.loads(spec.to_json()) == spec.to_dict()
+
+
+def test_from_dict_rejects_unknown_sections_and_accepts_async_alias():
+    spec = _spec()
+    d = spec.to_dict()
+    d["async"] = d.pop("async_")         # hand-written specs may skip the
+    assert api.ExperimentSpec.from_dict(d) == spec   # escaped field name
+    d["mesh_"] = {"shards": 8}
+    with pytest.raises(ValueError, match="unknown spec section"):
+        api.ExperimentSpec.from_dict(d)
+
+
+def test_run_rejects_mismatched_population():
+    from repro.sim import ClientPopulation
+    spec = _spec()
+    other = dataclasses.replace(spec, seed=spec.seed + 1)
+    pop = ClientPopulation.from_spec(other.population_spec())
+    with pytest.raises(ValueError, match="different PopulationSpec"):
+        api.run(spec, population=pop)
+
+
+def test_config_digest_stable_and_sensitive():
+    a, b = _spec(), _spec()
+    assert a.config_digest() == b.config_digest()
+    assert len(a.config_digest()) == 64
+    c = _spec(seed=8)
+    d = _spec(train=api.TrainSpec(strategy="bfln", rounds=2, sample_frac=0.3,
+                                  n_clusters=3))
+    assert len({a.config_digest(), c.config_digest(),
+                d.config_digest()}) == 3
+
+
+# --------------------------------------------------------------------------- #
+# validation at construction (used to fail deep inside the round loop)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bad", [
+    dict(mode="asink"), dict(sampler="random"), dict(strategy="fedsgd"),
+    dict(mesh_shards=0), dict(mesh_shards=2, engine=False),
+    dict(sample_frac=0.0), dict(sample_frac=1.5), dict(rounds=0),
+    dict(local_epochs=0), dict(lr=0.0), dict(eval_every=-1),
+    dict(buffer_size=0), dict(staleness_alpha=-0.1),
+])
+def test_simconfig_rejects_invalid_values(bad):
+    with pytest.raises(ValueError):
+        SimConfig._internal(**bad)
+
+
+@pytest.mark.parametrize("build", [
+    lambda: api.TrainSpec(mode="asink"),
+    lambda: api.TrainSpec(sampler="random"),
+    lambda: api.TrainSpec(strategy="fedsgd"),
+    lambda: api.TrainSpec(sample_frac=0.0),
+    lambda: api.TrainSpec(hidden=()),
+    lambda: api.MeshSpec(shards=0),
+    lambda: api.DataSpec(byzantine_frac=1.5),
+    lambda: api.DataSpec(n_clients=0),
+    lambda: api.DataSpec(straggler_slowdown=0.5),
+    lambda: api.EvalSpec(every=-1),
+    lambda: api.AsyncSpec(buffer_size=0),
+    lambda: api.ChainSpec(total_reward=-1.0),
+    lambda: api.ExperimentSpec(mesh=api.MeshSpec(shards=2), engine=False),
+])
+def test_spec_rejects_invalid_values(build):
+    with pytest.raises(ValueError):
+        build()
+
+
+# --------------------------------------------------------------------------- #
+# SimConfig deprecation shim: old kwargs → new spec equivalence
+# --------------------------------------------------------------------------- #
+
+def test_simconfig_warns_and_maps_to_spec():
+    old_kwargs = dict(rounds=4, sample_frac=0.25, n_clusters=3, mode="async",
+                      buffer_size=8, concurrency=16, eval_every=2,
+                      total_reward=10.0, hidden=(32,), mesh_shards=1, seed=3)
+    with pytest.warns(DeprecationWarning, match="ExperimentSpec"):
+        cfg = SimConfig(**old_kwargs)
+
+    expected = api.ExperimentSpec(
+        train=api.TrainSpec(rounds=4, sample_frac=0.25, n_clusters=3,
+                            mode="async", hidden=(32,)),
+        async_=api.AsyncSpec(buffer_size=8, concurrency=16),
+        eval=api.EvalSpec(every=2),
+        chain=api.ChainSpec(total_reward=10.0),
+        seed=3)
+    assert cfg.to_spec() == expected
+    # the flat view of the nested spec reproduces the old config exactly
+    flat = expected.sim_config()
+    assert flat == cfg
+    assert dataclasses.asdict(flat) == dataclasses.asdict(cfg)
+
+
+def test_spec_path_emits_no_deprecation_warning():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        spec = _spec()
+        spec.sim_config()
+        api.ExperimentSpec.from_flat(rounds=2)
+
+
+def test_from_flat_matches_nested():
+    assert api.ExperimentSpec.from_flat(rounds=3, mode="async",
+                                        buffer_size=4, concurrency=8) == \
+        api.ExperimentSpec(
+            train=api.TrainSpec(rounds=3, mode="async"),
+            async_=api.AsyncSpec(buffer_size=4, concurrency=8))
+
+
+# --------------------------------------------------------------------------- #
+# strategy registry
+# --------------------------------------------------------------------------- #
+
+def test_registry_lists_all_paper_strategies():
+    assert api.strategy_names() == ["bfln", "fedavg", "fedhkd", "fedproto",
+                                    "fedprox"]
+
+
+def test_register_strategy_collision_and_custom():
+    from repro.api import registry
+    with pytest.raises(ValueError, match="already registered"):
+        api.register_strategy("fedavg", lambda bundle, **kw: None)
+
+    def builder(bundle, *, probe=None, n_clusters=0, **params):
+        from repro.core.baselines import make_fedavg
+        return make_fedavg(bundle)._replace(name="myavg")
+
+    api.register_strategy("myavg", builder)
+    try:
+        spec = _spec(train=api.TrainSpec(strategy="myavg", rounds=1,
+                                         sample_frac=0.3, n_clusters=3))
+        res = api.run(spec)
+        assert res.manifest["strategy"] == "myavg"
+        assert res.report.chain_valid
+    finally:
+        del registry._REGISTRY["myavg"]
+
+
+def test_bfln_builder_requires_probe():
+    _, bundle = api.make_mlp_bundle(8, 4, hidden=(8,), rep_dim=4)
+    with pytest.raises(ValueError, match="probe"):
+        api.build_strategy("bfln", bundle, n_clusters=2)
+
+
+def test_federated_trainer_resolves_strategy_names():
+    import jax
+    from repro.core import FederatedTrainer
+    from repro.models import classifier as clf
+    from repro.optim import adam
+
+    data = api.load_packed_clients("synth10", 4, 0.3, n_batches=1,
+                                   batch_size=8, psi=8)
+    cfg, bundle = api.make_mlp_bundle(data.in_dim, data.num_classes,
+                                      hidden=(8,), rep_dim=4)
+    tr = FederatedTrainer(bundle, "bfln", adam(1e-3), local_epochs=1,
+                          n_clusters=2, probe=data.probe)
+    assert tr.strategy.name == "bfln"
+    sp = clf.init_stacked(cfg, jax.random.PRNGKey(0), 4)
+    p, o = tr.init(sp)
+    _, _, rec = tr.run_round(0, p, o, data.cx, data.cy,
+                             data.test_x, data.test_y)
+    assert tr.chain.validate() and rec.labels is not None
+
+    tr2 = FederatedTrainer(bundle, "fedavg", adam(1e-3), use_chain=False)
+    assert tr2.strategy.name == "fedavg"
+    with pytest.raises(ValueError, match="n_clusters"):
+        FederatedTrainer(bundle, "bfln", adam(1e-3), probe=data.probe)
+
+
+# --------------------------------------------------------------------------- #
+# run(): manifest + determinism + spec-first driver entry
+# --------------------------------------------------------------------------- #
+
+def test_run_manifest_carries_config_digest_and_replays():
+    spec = _spec()
+    a, b = api.run(spec), api.run(spec)
+    for res in (a, b):
+        m = res.manifest
+        assert m["config_digest"] == spec.config_digest()
+        assert m["strategy"] == "fedavg"
+        assert m["rounds_run"] == len(res.report.history)
+        assert m["chain_valid"] and m["ledger_conserved"]
+        used = {k: v for k, v in m["engine_compile_counts"].items() if v}
+        assert all(v == 1 for v in used.values())
+    # same spec ⇒ same digests, bit for bit
+    for key in ("event_log_digest", "block_hashes_digest", "balances_digest",
+                "final_accuracy"):
+        assert a.manifest[key] == b.manifest[key]
+    assert spec.train.strategy in a.summary()
+
+
+def test_driver_accepts_spec_and_flat_config_identically():
+    from repro.sim import ClientPopulation
+    spec = _spec()
+    pop1 = ClientPopulation.from_spec(spec.population_spec())
+    pop2 = ClientPopulation.from_spec(spec.population_spec())
+    a = SimulatedFederation(pop1, spec)
+    b = SimulatedFederation(pop2, spec.sim_config())
+    ra, rb = a.run(), b.run()
+    assert ra.event_log == rb.event_log
+    np.testing.assert_array_equal(ra.balances, rb.balances)
+    assert ra.final_accuracy == rb.final_accuracy
+    assert a.spec == spec
+    # the flat view carries no population sub-spec; everything else maps back
+    assert b.spec == dataclasses.replace(spec, data=api.DataSpec())

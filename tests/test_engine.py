@@ -183,15 +183,15 @@ def test_sync_step_zero_arrival_cluster_matches_legacy():
     new_data, out = ea.engine.sync_step(
         ea.arena.data, cohort_idx, cx, cy, arrived_w)
 
-    local_params, paa, mean_loss = eb._cohort_round(
+    local_params, agg, mean_loss = eb._cohort_round(
         jax.tree.map(lambda x: x[cohort_idx], eb.params), cx, cy, arrived_w)
     np.testing.assert_array_equal(np.asarray(out.labels), labels)
-    np.testing.assert_array_equal(np.asarray(out.corr), np.asarray(paa.corr))
+    np.testing.assert_array_equal(np.asarray(out.corr), np.asarray(agg.corr))
     assert float(out.mean_loss) == float(mean_loss)
     # scatter-back equivalence, bit for bit, dead cluster rows untouched
     upd = cohort[mask]
     new_rows = jax.tree.map(lambda x: x[jnp.asarray(np.flatnonzero(mask))],
-                            paa.new_stacked_params)
+                            agg.stacked_params)
     expect = jax.tree.map(lambda P, rows: P.at[jnp.asarray(upd)].set(rows),
                           eb.params, new_rows)
     np.testing.assert_array_equal(
