@@ -45,6 +45,19 @@ the steady engine round latency of EVERY registered strategy (bfln,
 fedavg, fedprox, fedproto, fedhkd) into ``per_strategy_steady_ms`` —
 each asserted at 1 compile per entry.
 
+``--mode async`` (or ``both``) adds the FedBuff lane: legacy vs engine
+buffered-flush latency through ``async_step``, steady state past warmup,
+with flush timings and staleness / staleness-weight distributions pulled
+from the `repro.obs` flight recorder, the same cross-driver replay gate
+(block hashes + balances identical), and a 1-compile assert on
+``async_step``.  Results land in the ``"async"`` section of
+``BENCH_round.json`` (merged into an existing file when run async-only).
+
+``--trace`` re-runs the headline engine case with the flight recorder on
+(JSONL trace ``round_bench_trace.jsonl`` + per-phase console table), so
+the per-phase round breakdown and the trace-on vs trace-off steady delta
+are visible next to the bench numbers.
+
 Prints ``round,<name>,<us_per_round>,<derived>`` CSV like the other benches.
 """
 from __future__ import annotations
@@ -79,7 +92,8 @@ WARMUP = 3            # rounds excluded from the steady-state mean (compiles)
 
 def _build(engine: bool, n_clients: int, sample_frac: float, rounds: int,
            eval_examples: int, mesh_shards: int = 1,
-           strategy: str = "bfln") -> SimulatedFederation:
+           strategy: str = "bfln", mode: str = "sync",
+           trace: bool = False) -> SimulatedFederation:
     import repro.api as api
 
     # fresh population per driver: LatencyModel draws advance an internal rng,
@@ -91,9 +105,16 @@ def _build(engine: bool, n_clients: int, sample_frac: float, rounds: int,
         data=api.DataSpec(n_clients=n_clients, straggler_frac=0.1,
                           dropout_rate=0.03, byzantine_frac=0.05),
         train=api.TrainSpec(strategy=strategy, rounds=rounds,
-                            sample_frac=sample_frac, n_clusters=5),
+                            sample_frac=sample_frac, n_clusters=5,
+                            mode=mode),
+        async_=api.AsyncSpec(
+            buffer_size=max(1, int(round(sample_frac * n_clients))),
+            concurrency=min(256, max(2, n_clients // 4))),
         eval=api.EvalSpec(every=1, examples=eval_examples),
-        mesh=api.MeshSpec(shards=mesh_shards), engine=engine, seed=0)
+        mesh=api.MeshSpec(shards=mesh_shards),
+        obs=api.ObsSpec(enabled=True, trace_path="round_bench_trace.jsonl")
+        if trace else api.ObsSpec(),
+        engine=engine, seed=0)
     return SimulatedFederation(pop, spec)
 
 
@@ -241,6 +262,69 @@ def _case(n_clients: int, sample_frac: float, rounds: int,
     return case
 
 
+def _async_run(engine: bool, n_clients: int, sample_frac: float,
+               flushes: int, eval_examples: int,
+               strategy: str = "bfln") -> dict:
+    """One FedBuff async lane: run ``flushes`` buffer flushes with the flight
+    recorder on and report steady flush latency + staleness metrics straight
+    from the obs registry (`repro.obs`)."""
+    sim = _build(engine, n_clients, sample_frac, flushes, eval_examples,
+                 strategy=strategy, mode="async", trace=True)
+    t0 = time.perf_counter()
+    sim._run_async()
+    wall_s = time.perf_counter() - t0
+    sim._finalize_history()
+
+    flush_ms = [r["dur_us"] / 1e3 for r in sim.obs.records
+                if r["kind"] == "span" and r["name"] == "flush.total"]
+    steady = flush_ms[WARMUP:] or flush_ms
+    snap = sim.obs.metrics.snapshot()
+    out = {
+        "engine": engine,
+        "strategy": strategy,
+        "flushes_run": len(flush_ms),
+        "first_flush_ms": round(flush_ms[0], 2) if flush_ms else None,
+        "steady_flush_ms": round(float(np.mean(steady)), 3),
+        "steady_flush_p50_ms": round(float(np.median(steady)), 3),
+        "wall_s": round(wall_s, 2),
+        "staleness": snap["summaries"].get("async.staleness"),
+        "staleness_weight": snap["summaries"].get("async.staleness_weight"),
+        "compile_counts": _compile_counts(sim) if engine else None,
+        "block_hashes": [b.block_hash() for b in sim.trainer.chain.blocks],
+        "balances": sim.trainer.ledger.balances,
+    }
+    return out
+
+
+def _async_case(n_clients: int, sample_frac: float, flushes: int,
+                eval_examples: int, strategy: str = "bfln") -> dict:
+    """The async lane: engine vs legacy FedBuff flushes on the same seeded
+    population — replay gate (block hashes + balances) plus the engine's
+    1-compile ``async_step`` contract."""
+    legacy = _async_run(False, n_clients, sample_frac, flushes, eval_examples,
+                        strategy=strategy)
+    engine = _async_run(True, n_clients, sample_frac, flushes, eval_examples,
+                        strategy=strategy)
+    assert legacy["block_hashes"] == engine["block_hashes"], \
+        "async engine replay diverged from the legacy driver"
+    assert np.array_equal(legacy["balances"], engine["balances"])
+    used = {k: v for k, v in engine["compile_counts"].items() if v}
+    assert all(v == 1 for v in used.values()), \
+        f"async engine entry recompiled: {engine['compile_counts']}"
+    assert used.get("async_step") == 1, \
+        f"async_step not exercised/compiled once: {engine['compile_counts']}"
+    drop = ("block_hashes", "balances", "engine")
+    return {
+        "strategy": strategy,
+        "buffer_size": max(1, int(round(sample_frac * n_clients))),
+        "legacy": {k: v for k, v in legacy.items() if k not in drop},
+        "engine": {k: v for k, v in engine.items() if k not in drop},
+        "steady_flush_speedup": round(
+            legacy["steady_flush_ms"] / engine["steady_flush_ms"], 2),
+        "replay_identical": True,
+    }
+
+
 def _strategy_sweep(n_clients: int, sample_frac: float, rounds: int,
                     eval_examples: int) -> dict:
     """Steady-round engine latency for EVERY registered strategy — the
@@ -262,15 +346,25 @@ def _strategy_sweep(n_clients: int, sample_frac: float, rounds: int,
 
 def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
          out: str = "BENCH_round.json", heavy_eval: bool = True,
-         mesh_shards: int = 8, strategy: str = "bfln") -> dict:
-    cases = {"headline_eval256": _case(n_clients, sample_frac, rounds, 256,
-                                       mesh_shards, strategy)}
-    if heavy_eval:
-        cases["heavy_eval1024"] = _case(n_clients, sample_frac, rounds, 1024,
-                                        mesh_shards, strategy)
+         mesh_shards: int = 8, strategy: str = "bfln", mode: str = "sync",
+         trace: bool = False) -> dict:
+    cases = {}
+    per_strategy = None
+    if mode in ("sync", "both"):
+        cases["headline_eval256"] = _case(n_clients, sample_frac, rounds, 256,
+                                          mesh_shards, strategy)
+        if heavy_eval:
+            cases["heavy_eval1024"] = _case(n_clients, sample_frac, rounds,
+                                            1024, mesh_shards, strategy)
+        sweep_rounds = max(WARMUP + 2, rounds // 5)
+        per_strategy = _strategy_sweep(n_clients, sample_frac, sweep_rounds,
+                                       256)
 
-    sweep_rounds = max(WARMUP + 2, rounds // 5)
-    per_strategy = _strategy_sweep(n_clients, sample_frac, sweep_rounds, 256)
+    async_case = None
+    if mode in ("async", "both"):
+        flushes = max(WARMUP + 2, rounds // 2)
+        async_case = _async_case(n_clients, sample_frac, flushes, 256,
+                                 strategy)
 
     result = {
         "bench": "round",
@@ -279,11 +373,42 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
         "rounds": rounds,
         "mesh_shards": mesh_shards,
         "strategy": strategy,
-        "per_strategy_steady_ms": per_strategy,
+        **({"per_strategy_steady_ms": per_strategy} if per_strategy else {}),
         **cases,
+        **({"async": async_case} if async_case else {}),
     }
+    if mode == "async" and os.path.exists(out):
+        # async-only runs merge into the existing sync results instead of
+        # clobbering them
+        with open(out) as f:
+            prev = json.load(f)
+        prev["async"] = async_case
+        result = prev
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
+
+    if trace:
+        from repro.obs import console_summary
+        sim = _build(True, n_clients, sample_frac,
+                     max(WARMUP + 2, rounds // 5), 256,
+                     strategy=strategy, trace=True)
+        for r in range(max(WARMUP + 2, rounds // 5)):
+            sim.history.append(sim._run_sync_round(r))
+        sim._finalize_history()
+        print(console_summary(sim.obs.metrics,
+                              title=f"traced engine rounds ({strategy})"))
+
+    if async_case is not None:
+        for side in ("legacy", "engine"):
+            row = async_case[side]
+            st = row.get("staleness") or {}
+            print(f"round,async_{side},{row['steady_flush_ms'] * 1e3:.0f},"
+                  f"steady flush ms (buffer={async_case['buffer_size']}) "
+                  f"first_ms={row['first_flush_ms']} "
+                  f"staleness_p50={st.get('p50', 0):.1f} "
+                  f"staleness_p99={st.get('p99', 0):.1f}")
+        print(f"round,async_speedup,{async_case['steady_flush_speedup']:.2f},"
+              f"replay_identical=True async_step_compiles=1")
 
     for cname, case in cases.items():
         for side in ("legacy", "engine", "sharded"):
@@ -309,15 +434,19 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
                   f"arena_bytes_per_device_reduction over {mesh_shards} "
                   f"shards, round_overhead="
                   f"{case['sharded_round_overhead']:.2f}x, replay_identical")
-    for name, row in per_strategy.items():
+    for name, row in (per_strategy or {}).items():
         print(f"round,strategy_{name},{row['steady_ms'] * 1e3:.0f},"
               f"engine steady round (1 compile per entry) "
               f"first_ms={row['first_round_ms']}")
-    headline = cases["headline_eval256"]["steady_speedup"]
-    print(f"round,result,{headline:.2f},-> {out}")
-    if headline < 5:
-        print(f"round,WARNING,0,headline speedup {headline:.2f}x below the "
-              f"5x target")
+    if "headline_eval256" in cases:
+        headline = cases["headline_eval256"]["steady_speedup"]
+        print(f"round,result,{headline:.2f},-> {out}")
+        if headline < 5:
+            print(f"round,WARNING,0,headline speedup {headline:.2f}x below "
+                  f"the 5x target")
+    else:
+        print(f"round,result,{async_case['steady_flush_speedup']:.2f},"
+              f"-> {out}")
     return result
 
 
@@ -328,6 +457,14 @@ if __name__ == "__main__":
     p.add_argument("--strategy", default="bfln",
                    help="strategy for the headline legacy-vs-engine case "
                         "(the per-strategy sweep always covers all of them)")
+    p.add_argument("--mode", choices=("sync", "async", "both"),
+                   default="sync",
+                   help="async: FedBuff flush lane (engine vs legacy, steady "
+                        "flush latency + staleness metrics via repro.obs); "
+                        "async-only runs merge into an existing out file")
+    p.add_argument("--trace", action="store_true",
+                   help="after the bench, run a traced engine case and print "
+                        "the per-phase console summary (repro.obs)")
     p.add_argument("--n-clients", type=int, default=None)
     p.add_argument("--rounds", type=int, default=None)
     p.add_argument("--mesh-shards", type=int, default=8,
@@ -349,4 +486,5 @@ if __name__ == "__main__":
     n = args.n_clients or (200 if args.quick else 1000)
     r = args.rounds or (10 if args.quick else 50)
     main(n_clients=n, rounds=r, out=args.out, heavy_eval=not args.quick,
-         mesh_shards=args.mesh_shards, strategy=args.strategy)
+         mesh_shards=args.mesh_shards, strategy=args.strategy,
+         mode=args.mode, trace=args.trace)

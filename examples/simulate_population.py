@@ -25,6 +25,9 @@ Finishes in well under 2 minutes on CPU.  Scenario knobs:
   --mesh-shards N                           row-shard the parameter arena
                                             over an N-device client mesh
                                             (CPU devices self-forced)
+  --trace t.jsonl [--chrome-trace t.json]   flight-recorder trace (repro.obs):
+                                            per-phase spans + metrics, digest
+                                            stamped into the manifest
 """
 import argparse
 import time
@@ -72,6 +75,9 @@ def build_spec(args) -> api.ExperimentSpec:
             staleness_alpha=args.staleness_alpha),
         eval=api.EvalSpec(every=5),
         mesh=api.MeshSpec(shards=args.mesh_shards),
+        obs=api.ObsSpec(enabled=True, trace_path=args.trace,
+                        chrome_path=args.chrome_trace, console=True)
+        if args.trace else api.ObsSpec(),
         seed=args.seed)
 
 
@@ -110,6 +116,12 @@ def main():
     ap.add_argument("--concurrency", type=int, default=64)
     ap.add_argument("--staleness-alpha", type=float, default=0.5)
     ap.add_argument("--mesh-shards", type=int, default=1)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a flight-recorder trace (repro.obs): JSONL "
+                         "to PATH, per-phase console table, trace sha256 "
+                         "stamped into the manifest")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="with --trace: also export a Chrome/Perfetto trace")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-async-demo", action="store_true")
     ap.add_argument("--spec-json", default=None, metavar="PATH",

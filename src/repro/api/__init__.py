@@ -36,5 +36,6 @@ from repro.api.spec import (  # noqa: F401
     EvalSpec,
     ExperimentSpec,
     MeshSpec,
+    ObsSpec,
     TrainSpec,
 )

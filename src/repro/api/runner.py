@@ -15,6 +15,7 @@ from dataclasses import dataclass, field
 from typing import Any
 
 from repro.api.spec import ExperimentSpec
+from repro.obs import console_summary, write_chrome_trace, write_jsonl
 from repro.sim import ClientPopulation, SimReport, SimulatedFederation
 
 
@@ -34,8 +35,17 @@ class ExperimentResult:
 
     def summary(self) -> str:
         m = self.manifest
-        return (f"[{m['strategy']}/{m['mode']}] {self.report.summary()} "
+        line = (f"[{m['strategy']}/{m['mode']}] {self.report.summary()} "
                 f"config_digest={m['config_digest'][:12]}")
+        t = m.get("timing")
+        if t:
+            unit = "flush" if m.get("mode") == "async" else "round"
+            line += (f"\n  timing: {unit} p50={t.get('round_ms_p50', 0):.1f}ms"
+                     f" p99={t.get('round_ms_p99', 0):.1f}ms")
+            if "chain_overhead_pct" in t:
+                line += f" chain={t['chain_overhead_pct']:.1f}%"
+            line += f" compiles={t.get('compiles', 0)}"
+        return line
 
 
 def build_manifest(spec: ExperimentSpec, sim: SimulatedFederation,
@@ -92,5 +102,36 @@ def run(spec: ExperimentSpec, population: ClientPopulation | None = None,
             f"config_digest would not replay this run.\n  population: "
             f"{population.spec}\n  spec:       {spec.population_spec()}")
     sim = SimulatedFederation(population, spec)
-    report = sim.run()
-    return ExperimentResult(spec, report, build_manifest(spec, sim, report))
+    profile_dir = spec.obs.profile_dir if spec.obs.enabled else None
+    if profile_dir is not None:
+        import jax
+        with jax.profiler.trace(profile_dir):
+            report = sim.run()
+    else:
+        report = sim.run()
+    manifest = build_manifest(spec, sim, report)
+    if sim.obs.enabled:
+        _emit_trace(spec, sim, manifest)
+    return ExperimentResult(spec, report, manifest)
+
+
+def _emit_trace(spec: ExperimentSpec, sim: SimulatedFederation,
+                manifest: dict[str, Any]) -> None:
+    """Flush the flight recorder's sinks and stamp the trace digest into the
+    manifest.  Strictly post-run: by construction nothing here can perturb
+    the simulation it describes."""
+    obs = sim.obs
+    meta = {k: manifest[k] for k in
+            ("config_digest", "strategy", "mode", "engine", "mesh_shards",
+             "seed", "n_clients", "rounds_run")}
+    digest = write_jsonl(spec.obs.trace_path, meta, obs.records, obs.metrics)
+    manifest["trace_path"] = spec.obs.trace_path
+    manifest["trace_digest"] = digest
+    manifest["timing"] = obs.timing_summary()
+    if spec.obs.chrome_path is not None:
+        write_chrome_trace(spec.obs.chrome_path, obs.records)
+        manifest["chrome_trace_path"] = spec.obs.chrome_path
+    if spec.obs.console:
+        print(console_summary(
+            obs.metrics, title=f"trace {spec.train.strategy}/"
+            f"{spec.train.mode} -> {spec.obs.trace_path}"))

@@ -3,7 +3,7 @@
 The public experiment surface used to be three disjoint entry points: the
 legacy ``FederatedTrainer`` (hand-wired bundle/optimizer/data), the flat
 22-field ``SimConfig`` (BFLN hardcoded), and per-example wiring.  The spec
-nests the flat knobs into six sub-configs —
+nests the flat knobs into seven sub-configs —
 
     data    population: shards, behaviour profiles, latency (→ PopulationSpec)
     train   the round loop: strategy, rounds, sampling, model width, lr
@@ -11,6 +11,7 @@ nests the flat knobs into six sub-configs —
     eval    metric cadence and sub-sampling
     chain   blockchain incentives: reward pool, rho, initial stake
     mesh    client-axis device mesh for the sharded arena
+    obs     flight recorder: span tracing + metrics sinks (→ repro.obs)
 
 — and is the input to :func:`repro.api.run`.  Every spec round-trips through
 JSON (``from_json(to_json(spec)) == spec``) and hashes to a stable
@@ -30,6 +31,8 @@ import hashlib
 import json
 from dataclasses import dataclass, field
 from typing import Any, Mapping
+
+from repro.obs.spec import ObsSpec
 
 
 def _check(cond: bool, msg: str) -> None:
@@ -164,7 +167,8 @@ class MeshSpec:
 
 
 _SUB_SPECS = {"data": DataSpec, "train": TrainSpec, "async_": AsyncSpec,
-              "eval": EvalSpec, "chain": ChainSpec, "mesh": MeshSpec}
+              "eval": EvalSpec, "chain": ChainSpec, "mesh": MeshSpec,
+              "obs": ObsSpec}
 
 
 @dataclass(frozen=True)
@@ -176,6 +180,7 @@ class ExperimentSpec:
     eval: EvalSpec = field(default_factory=EvalSpec)
     chain: ChainSpec = field(default_factory=ChainSpec)
     mesh: MeshSpec = field(default_factory=MeshSpec)
+    obs: ObsSpec = field(default_factory=ObsSpec)   # flight recorder (off)
     engine: bool = True               # arena-backed fused round engine
     seed: int = 0
 
@@ -262,5 +267,14 @@ class ExperimentSpec:
 
     def config_digest(self) -> str:
         """Stable SHA-256 over the canonical JSON form — the reproducibility
-        stamp every run manifest carries."""
-        return hashlib.sha256(self.to_json().encode()).hexdigest()
+        stamp every run manifest carries.
+
+        The ``obs`` section is excluded: observability is out-of-band by
+        contract (it times and counts, never perturbs — the invariance tests
+        pin bit-identical replay with tracing on and off), so a traced run
+        and its untraced twin share the same replay recipe.
+        """
+        d = self.to_dict()
+        d.pop("obs", None)
+        return hashlib.sha256(
+            json.dumps(d, sort_keys=True).encode()).hexdigest()

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.blockchain.commit import AGG_COMMIT_KIND, RoundCommitments
 from repro.blockchain.txpool import Transaction, TxPool
+from repro.obs import NULL_RECORDER
 
 Pytree = Any
 
@@ -133,6 +134,7 @@ class Blockchain:
         if not self.blocks:
             genesis = Block(0, -1, -1, "0" * 64, _merkle_root([]), ())
             self.blocks.append(genesis)
+        self.obs = NULL_RECORDER    # flight recorder (repro.obs), rebindable
 
     @property
     def head(self) -> Block:
@@ -140,16 +142,20 @@ class Blockchain:
 
     def pack_block(self, round_idx: int, producer: int, pool: TxPool) -> Block:
         """Producer drains the tx pool into a new block (DPoS slot)."""
-        txs = tuple(pool.drain())
-        block = Block(
-            index=len(self.blocks),
-            round_idx=round_idx,
-            producer=producer,
-            prev_hash=self.head.block_hash(),
-            merkle_root=_merkle_root([t.tx_hash() for t in txs]),
-            transactions=txs,
-        )
-        self.blocks.append(block)
+        with self.obs.span("chain.pack", cat="chain", round=round_idx) as sp:
+            txs = tuple(pool.drain())
+            block = Block(
+                index=len(self.blocks),
+                round_idx=round_idx,
+                producer=producer,
+                prev_hash=self.head.block_hash(),
+                merkle_root=_merkle_root([t.tx_hash() for t in txs]),
+                transactions=txs,
+            )
+            self.blocks.append(block)
+            sp.set(n_tx=len(txs))
+        self.obs.inc("chain.blocks")
+        self.obs.inc("chain.tx", len(txs))
         return block
 
     def validate(self) -> bool:
@@ -162,6 +168,11 @@ class Blockchain:
         CVE-2012-2459 duplicated-tx mutation reproduces the legacy root yet
         always trips that flag, so the mutated chain is rejected under both
         schemes."""
+        with self.obs.span("chain.validate", cat="chain") as sp:
+            sp.set(n_blocks=len(self.blocks))
+            return self._validate()
+
+    def _validate(self) -> bool:
         for prev, cur in zip(self.blocks, self.blocks[1:]):
             if cur.prev_hash != prev.block_hash():
                 return False
@@ -192,6 +203,11 @@ class Blockchain:
         Legacy ``agg_hash`` blocks (pre-sender-binding) fall back to the old
         set-membership rule so historic chains replay; new blocks never mix
         the two kinds."""
+        with self.obs.span("chain.verify", cat="chain",
+                           round=block.round_idx):
+            return self._verify_round(block, n_clients)
+
+    def _verify_round(self, block: Block, n_clients: int) -> np.ndarray:
         committed: dict[int, str] = {}
         bound: dict[int, str] | None = None
         legacy: set[str] = set()

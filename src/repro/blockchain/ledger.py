@@ -11,6 +11,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import NULL_RECORDER
+
 
 @dataclass
 class TokenLedger:
@@ -22,6 +24,7 @@ class TokenLedger:
     def __post_init__(self):
         self.balances = np.full((self.n_clients,), float(self.initial_stake))
         self.minted = float(self.initial_stake) * self.n_clients
+        self.obs = NULL_RECORDER    # flight recorder (repro.obs), rebindable
 
     def mint_reward_pool(self, amount: float) -> float:
         self.minted += float(amount)
@@ -44,7 +47,13 @@ class TokenLedger:
         else:
             self.minted -= float(fees.sum())        # forfeited fees leave supply
         # burned tokens leave supply
-        self.minted -= float(np.where(~verified, client_reward, 0.0).sum())
+        burned = float(np.where(~verified, client_reward, 0.0).sum())
+        self.minted -= burned
+        obs = self.obs
+        if obs.enabled:
+            obs.observe("ledger.paid", float(paid.sum()))
+            obs.observe("ledger.fees", float(fees.sum()))
+            obs.observe("ledger.burned", burned)
 
     def total_supply(self) -> float:
         return float(self.balances.sum())

@@ -69,6 +69,10 @@ class Strategy(NamedTuple):
     # (stacked_params, cx, cy, arrived_w) -> CohortAggOut
     aggregate_cohort: Callable[
         [Pytree, jax.Array, jax.Array, jax.Array], "CohortAggOut"] | None = None
+    # True: round_extras returns ONE pytree shared by every client (no
+    # leading client axis) — local_train broadcasts it via in_axes=None
+    # instead of shipping k redundant copies through the vmap
+    shared_extras: bool = False
 
 
 def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
@@ -142,7 +146,10 @@ def make_fedavg(model: ModelBundle) -> Strategy:
 
 def make_fedprox(model: ModelBundle, mu: float = 0.01) -> Strategy:
     def round_extras(stacked_params, cx, cy):
-        return _global_mean(stacked_params)  # the anchor, per client
+        # ONE shared anchor (no per-client broadcast): the prox gradient
+        # µ·(w − w_global) then reads a single (N,) anchor inside the fused
+        # step instead of k identical copies (shared_extras=True below)
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked_params)
 
     def local_loss(params, x, y, anchor):
         ce = _xent(model.apply_fn(params, x), y)
@@ -157,7 +164,7 @@ def make_fedprox(model: ModelBundle, mu: float = 0.01) -> Strategy:
                             *_single_cluster_view(cx.shape[0]))
 
     return Strategy("fedprox", round_extras, local_loss, aggregate,
-                    aggregate_cohort)
+                    aggregate_cohort, shared_extras=True)
 
 
 # --------------------------------------------------------------------------- #

@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.core.fl import local_train
 from repro.kernels.fingerprint import fingerprint_rows, format_digest
+from repro.obs import NULL_RECORDER
 from repro.runtime.arena import ArenaLayout, bitcast_u32
 
 Pytree = Any
@@ -92,6 +93,7 @@ class RoundEngine:
         local_epochs: int,
         stacked_apply_fn: Callable | None = None,
         sharding=None,                  # client-axis NamedSharding (mesh mode)
+        obs=NULL_RECORDER,              # repro.obs flight recorder
     ):
         if strategy.aggregate_cohort is None:
             raise ValueError(
@@ -133,7 +135,8 @@ class RoundEngine:
             opt_state = jax.vmap(opt.init)(cohort_params)
             extras = strategy.round_extras(cohort_params, cx, cy)
             return local_train(strategy.local_loss, opt, cohort_params,
-                               opt_state, cx, cy, extras, local_epochs)
+                               opt_state, cx, cy, extras, local_epochs,
+                               shared_extras=strategy.shared_extras)
 
         def _sync_step(arena, cohort_idx, cx, cy, arrived):
             # (k, N) gather; mesh mode all-gathers ONLY the cohort rows to a
@@ -195,11 +198,14 @@ class RoundEngine:
             rows = _rep(arena[ids])       # replicate only the sampled rows
             return jnp.mean(_client_accs(layout.unflatten(rows), ex, ey))
 
+        self.obs = obs
         self.sync_step = jax.jit(_sync_step, donate_argnums=(0,))
         self.async_step = jax.jit(_async_step)
         self.eval_cohort = jax.jit(_eval_cohort)
         self.eval_global = jax.jit(_eval_global)
         self.eval_population = jax.jit(_eval_population)
+        # raw jitted fns — cache_sizes() must read _cache_size() on these
+        # even when the public attributes are wrapped with call counters
         self._entries = {
             "sync_step": self.sync_step,
             "async_step": self.async_step,
@@ -207,6 +213,16 @@ class RoundEngine:
             "eval_global": self.eval_global,
             "eval_population": self.eval_population,
         }
+        if obs.enabled:
+            # per-entry call counters (metrics only — timing lives in the
+            # caller's spans, which know the round index)
+            def _counted(name, fn):
+                def wrapper(*a, **kw):
+                    obs.inc(f"engine.calls.{name}")
+                    return fn(*a, **kw)
+                return wrapper
+            for name, fn in self._entries.items():
+                setattr(self, name, _counted(name, fn))
 
     # ------------------------------------------------------------------ #
 

@@ -38,12 +38,16 @@ def local_train(
     y: jax.Array,
     extras: Any,
     epochs: int,
+    shared_extras: bool = False,
 ) -> LocalTrainResult:
     """Run ``epochs`` passes of minibatch SGD on every client in parallel.
 
-    ``extras`` is an arbitrary pytree of per-client auxiliary inputs (leading
-    client axis on every leaf) consumed by the strategy's loss — e.g. the
-    anchor params for FedProx, global prototypes for FedProto.
+    ``extras`` is an arbitrary pytree of auxiliary inputs consumed by the
+    strategy's loss — e.g. the anchor params for FedProx, global prototypes
+    for FedProto.  Per-client by default (leading client axis on every leaf,
+    vmapped alongside the client); ``shared_extras=True`` instead broadcasts
+    ONE extras pytree to every client (``in_axes=None``), so a cohort-wide
+    anchor never materialises k redundant copies.
     """
     grad_fn = jax.value_and_grad(loss_fn)
 
@@ -61,7 +65,8 @@ def local_train(
             step, (params, opt_state), jnp.arange(epochs * nb))
         return params, opt_state, jnp.mean(losses)
 
-    params, opt_state, losses = jax.vmap(one_client)(
+    params, opt_state, losses = jax.vmap(
+        one_client, in_axes=(0, 0, 0, 0, None if shared_extras else 0))(
         stacked_params, stacked_opt_state, x, y, extras)
     return LocalTrainResult(params, opt_state, losses)
 

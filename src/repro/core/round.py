@@ -28,6 +28,7 @@ from repro.core.baselines import AggOut, ModelBundle, Strategy
 from repro.core.fl import LocalTrainResult, global_evaluate, local_train
 from repro.core.incentives import allocate_rewards
 from repro.kernels.fingerprint import cohort_digests
+from repro.obs import NULL_RECORDER
 from repro.optim import Optimizer
 
 Pytree = Any
@@ -96,6 +97,7 @@ class FederatedTrainer:
         self.pool = TxPool()
         self.ledger: TokenLedger | None = None
         self._queue: list[int] = []
+        self.obs = NULL_RECORDER
 
         strategy = self.strategy
 
@@ -104,7 +106,8 @@ class FederatedTrainer:
             extras = strategy.round_extras(stacked_params, cx, cy)
             res: LocalTrainResult = local_train(
                 strategy.local_loss, self.opt, stacked_params, stacked_opt,
-                cx, cy, extras, self.local_epochs)
+                cx, cy, extras, self.local_epochs,
+                shared_extras=strategy.shared_extras)
             agg: AggOut = strategy.aggregate(res.params, cx, cy)
             return res.params, agg, res.opt_state, jnp.mean(res.mean_loss)
 
@@ -113,10 +116,20 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------------ #
 
+    def attach_obs(self, obs) -> None:
+        """Bind a flight recorder (`repro.obs`) to the trainer and its chain
+        components.  Called after construction so it also covers a ledger
+        the simulator swapped in."""
+        self.obs = obs
+        self.chain.obs = obs
+        if self.ledger is not None:
+            self.ledger.obs = obs
+
     def init(self, stacked_params: Pytree) -> tuple[Pytree, Pytree]:
         n = jax.tree.leaves(stacked_params)[0].shape[0]
         if self.use_chain:
             self.ledger = TokenLedger(n, self.initial_stake)
+            self.ledger.obs = self.obs
         opt_state = jax.vmap(self.opt.init)(stacked_params)
         return stacked_params, opt_state
 
@@ -199,31 +212,39 @@ class FederatedTrainer:
             # nobody delivered an update: no block, the round's pool stays unminted
             return ChainRoundResult(-1, np.zeros(k, bool), np.zeros(k))
 
+        obs = self.obs
         if digests is None:
             # one fingerprint pass over the cohort-stacked params (slot-indexed)
-            digests = cohort_digests(local_params)
+            with obs.span("chain.digests", cat="chain", round=round_idx):
+                digests = cohort_digests(local_params)
 
         # -- Fig.1 step 2: arrived clients commit model digests ------------ #
-        entries: list[tuple[int, str]] = []    # what the producer aggregated
-        for slot in range(k):
-            if not arrived[slot]:
-                continue
-            gid = int(cohort[slot])
-            claimed = tamper.get(gid, digests[slot])
-            if not isinstance(claimed, str):
-                claimed = digest_of(claimed)
-            self.pool.submit(Transaction("model_hash", gid, claimed, round_idx))
-            entries.append((gid, digests[slot]))
+        with obs.span("chain.commit", cat="chain", round=round_idx) as sp:
+            entries: list[tuple[int, str]] = []  # what the producer aggregated
+            for slot in range(k):
+                if not arrived[slot]:
+                    continue
+                gid = int(cohort[slot])
+                claimed = tamper.get(gid, digests[slot])
+                if not isinstance(claimed, str):
+                    claimed = digest_of(claimed)
+                self.pool.submit(
+                    Transaction("model_hash", gid, claimed, round_idx))
+                entries.append((gid, digests[slot]))
+            sp.set(n_commits=len(entries))
 
         # -- CACC: centroid representatives -> packing queue --------------- #
-        sel = cacc.select_centroid_clients(corr, labels, self.n_clusters)
-        queue = [int(cohort[slot]) for slot in cacc.packing_queue(sel.representatives)]
-        self._queue = queue or self._queue or [int(cohort[0])]
-        active = {int(g) for g in cohort[arrived]}
-        try:
-            producer = cacc.producer_for_round(self._queue, round_idx, active)
-        except ValueError:
-            producer = min(active)   # no representative arrived this round
+        with obs.span("chain.consensus", cat="chain", round=round_idx):
+            sel = cacc.select_centroid_clients(corr, labels, self.n_clusters)
+            queue = [int(cohort[slot])
+                     for slot in cacc.packing_queue(sel.representatives)]
+            self._queue = queue or self._queue or [int(cohort[0])]
+            active = {int(g) for g in cohort[arrived]}
+            try:
+                producer = cacc.producer_for_round(self._queue, round_idx,
+                                                   active)
+            except ValueError:
+                producer = min(active)  # no representative arrived this round
 
         # -- Fig.1 step 5: producer records sender-bound commitments ------- #
         commits = RoundCommitments(round_idx, tuple(entries))
@@ -233,13 +254,15 @@ class FederatedTrainer:
 
         # -- Fig.1 step 6: consensus verification + incentives ------------- #
         verified_total = self.chain.verify_round(block, n_total)
-        alloc = allocate_rewards(labels, self.n_clusters, self.total_reward,
-                                 self.rho, participating=jnp.asarray(arrived))
-        rewards_total = np.zeros(n_total)
-        rewards_total[cohort] = np.asarray(alloc.client_reward)
-        self.ledger.mint_reward_pool(self.total_reward)
-        self.ledger.settle_round(rewards_total, float(alloc.fee),
-                                 producer, verified_total)
+        with obs.span("chain.rewards", cat="chain", round=round_idx):
+            alloc = allocate_rewards(labels, self.n_clusters,
+                                     self.total_reward, self.rho,
+                                     participating=jnp.asarray(arrived))
+            rewards_total = np.zeros(n_total)
+            rewards_total[cohort] = np.asarray(alloc.client_reward)
+            self.ledger.mint_reward_pool(self.total_reward)
+            self.ledger.settle_round(rewards_total, float(alloc.fee),
+                                     producer, verified_total)
 
         verified = verified_total[cohort]
         rewards = np.where(verified, rewards_total[cohort], 0.0)

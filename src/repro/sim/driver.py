@@ -64,6 +64,7 @@ from repro.core import FederatedTrainer, ModelBundle, digest_of
 from repro.core.engine import RoundEngine
 from repro.core.fl import global_evaluate, local_train
 from repro.models import classifier as clf
+from repro.obs import NULL_RECORDER, FlightRecorder
 from repro.optim import adam
 from repro.runtime.arena import ParamArena, ShardedParamArena
 from repro.sim import events as ev
@@ -286,6 +287,15 @@ class SimulatedFederation:
         self.event_log: list[tuple] = []
         self.history: list[SimRoundRecord] = []
 
+        # flight recorder (repro.obs): spans/metrics ride along out of band.
+        # Disabled runs bind the shared no-op recorder — the hot path then
+        # pays only no-op method calls (the < 2% trace-off budget).
+        obs_spec = getattr(self.spec, "obs", None)
+        if obs_spec is not None and obs_spec.enabled:
+            self.obs = FlightRecorder(obs_spec, clock=lambda: self.clock.now)
+        else:
+            self.obs = NULL_RECORDER
+
         strategy = strat
         opt = self.opt
         n_clusters = config.n_clusters
@@ -308,7 +318,21 @@ class SimulatedFederation:
                 strategy=strategy, opt=opt,
                 n_clusters=n_clusters, local_epochs=epochs,
                 stacked_apply_fn=functools.partial(clf.apply_stacked, mcfg),
-                sharding=getattr(self.arena, "sharding", None))
+                sharding=getattr(self.arena, "sharding", None),
+                obs=self.obs)
+            if self.obs.enabled:
+                self.obs.set_gauge("arena.bytes", int(self.arena.data.nbytes))
+                per_dev = getattr(self.arena, "per_device_bytes", None)
+                self.obs.set_gauge(
+                    "arena.per_device_bytes",
+                    int(per_dev()) if per_dev else int(self.arena.data.nbytes))
+                # per-round cohort collective traffic: the replicated (k, N)
+                # gather in + the row updates out (see repro.core.engine)
+                k = max(1, int(round(config.sample_frac * n)))
+                self.obs.set_gauge(
+                    "engine.cohort_bytes",
+                    2 * k * self.arena.layout.n_params * 4)
+        self.trainer.attach_obs(self.obs)
 
         # ------- legacy (pre-arena) jitted programs, kept as the oracle ---- #
 
@@ -320,7 +344,8 @@ class SimulatedFederation:
             opt_state = jax.vmap(opt.init)(cohort_params)
             extras = strategy.round_extras(cohort_params, cx, cy)
             res = local_train(strategy.local_loss, opt, cohort_params,
-                              opt_state, cx, cy, extras, epochs)
+                              opt_state, cx, cy, extras, epochs,
+                              shared_extras=strategy.shared_extras)
             agg = strategy.aggregate_cohort(res.params, cx, cy, arrived_w)
             return res.params, agg, jnp.mean(res.mean_loss)
 
@@ -333,7 +358,8 @@ class SimulatedFederation:
             opt_state = jax.vmap(opt.init)(cohort_params)
             extras = strategy.round_extras(cohort_params, cx, cy)
             res = local_train(strategy.local_loss, opt, cohort_params,
-                              opt_state, cx, cy, extras, epochs)
+                              opt_state, cx, cy, extras, epochs,
+                              shared_extras=strategy.shared_extras)
             return res.params, jnp.mean(res.mean_loss)
 
         self._local_only = _local_only
@@ -397,12 +423,18 @@ class SimulatedFederation:
     # ------------------------------------------------------------------ #
 
     def _run_sync_round(self, r: int) -> SimRoundRecord:
-        cfg, pop, rng = self.cfg, self.pop, self.rng
+        with self.obs.span("round.total", round=r) as rt:
+            return self._sync_round_body(r, rt)
+
+    def _sync_round_body(self, r: int, rt) -> SimRoundRecord:
+        cfg, pop, rng, obs = self.cfg, self.pop, self.rng, self.obs
         t0 = self.clock.now
         k = max(1, int(round(cfg.sample_frac * pop.n_clients)))
 
-        online = pop.online_clients(rng)
-        cohort = self.sampler(rng, online, k, self._sampler_state())
+        with obs.span("round.sample", round=r) as sp:
+            online = pop.online_clients(rng)
+            cohort = self.sampler(rng, online, k, self._sampler_state())
+            sp.set(online=len(online), k=len(cohort))
         self.queue.push(t0 + cfg.deadline, ev.BLOCK_SLOT, round_idx=r)
 
         dropouts: set[int] = set()        # classified at schedule time — a
@@ -418,19 +450,26 @@ class SimulatedFederation:
                 self.queue.push(t0 + lat, ev.UPDATE_READY, gid, r)
 
         arrived_set: set[int] = set()
-        while True:
-            e = self.queue.pop()
-            self.clock.advance_to(e.time)
-            self._log(e)
-            if e.kind == ev.BLOCK_SLOT and e.round_idx == r:
-                break
-            if e.round_idx != r:
-                continue                      # late event from an old round
-            if e.kind == ev.UPDATE_READY:
-                arrived_set.add(e.client)
+        with obs.span("round.wait", round=r) as sp:
+            # the block slot on the VIRTUAL clock: wall time here is event
+            # bookkeeping, the span's vt_dur attr is the simulated wait
+            n_events = 0
+            while True:
+                e = self.queue.pop()
+                self.clock.advance_to(e.time)
+                self._log(e)
+                n_events += 1
+                if e.kind == ev.BLOCK_SLOT and e.round_idx == r:
+                    break
+                if e.round_idx != r:
+                    continue                  # late event from an old round
+                if e.kind == ev.UPDATE_READY:
+                    arrived_set.add(e.client)
+            sp.set(n_events=n_events)
 
         arrived = np.array([int(g) in arrived_set for g in cohort], dtype=bool)
         n_strag = int(len(cohort) - arrived.sum() - len(dropouts))
+        rt.set(arrived=int(arrived.sum()))
 
         record = SimRoundRecord(
             round_idx=r, t_open=t0, t_close=self.clock.now, cohort=cohort,
@@ -440,41 +479,54 @@ class SimulatedFederation:
             reward_burned=0.0, mean_loss=float("nan"))
 
         if not arrived.any():
+            obs.inc("rounds.empty")
             return record                     # empty round: no block minted
 
-        cx, cy = pop.cohort_data(cohort)
+        with obs.span("round.gather", round=r):
+            cx, cy = pop.cohort_data(cohort)
         arrived_w = jnp.asarray(arrived, jnp.float32)
 
         if self.engine is not None:
             # ONE donated device program: gather → train → PAA → digests →
             # masked scatter-back; the host sees only O(cohort) bytes
             cohort_idx = jnp.asarray(cohort)
-            self.arena.data, out = self.engine.sync_step(
-                self.arena.data, cohort_idx, cx, cy, arrived_w)
+            with obs.span("round.step", round=r):
+                self.arena.data, out = self.engine.sync_step(
+                    self.arena.data, cohort_idx, cx, cy, arrived_w)
+                obs.ready(out)
+            if obs.enabled:
+                obs.compile_delta(self.engine.cache_sizes(), r)
             labels_dev, mean_loss = out.labels, out.mean_loss
-            cres = self.trainer.chain_round(
-                r, None, labels_dev, out.corr, cohort=cohort, arrived=arrived,
-                tamper=self._tampers(cohort, arrived),
-                digests=self.engine.format_digests(out.residues))
+            with obs.span("round.digests", round=r):
+                digests = self.engine.format_digests(out.residues)
+            with obs.span("round.chain", round=r):
+                cres = self.trainer.chain_round(
+                    r, None, labels_dev, out.corr, cohort=cohort,
+                    arrived=arrived, tamper=self._tampers(cohort, arrived),
+                    digests=digests)
         else:
-            cohort_params = jax.tree.map(lambda x: x[jnp.asarray(cohort)],
-                                         self._params)
-            local_params, agg, mean_loss = self._cohort_round(
-                cohort_params, cx, cy, arrived_w)
+            with obs.span("round.step", round=r):
+                cohort_params = jax.tree.map(lambda x: x[jnp.asarray(cohort)],
+                                             self._params)
+                local_params, agg, mean_loss = self._cohort_round(
+                    cohort_params, cx, cy, arrived_w)
+                obs.ready(mean_loss)
             labels_dev = agg.labels
-            cres = self.trainer.chain_round(
-                r, local_params, agg.labels, agg.corr, cohort=cohort,
-                arrived=arrived, tamper=self._tampers(cohort, arrived))
+            with obs.span("round.chain", round=r):
+                cres = self.trainer.chain_round(
+                    r, local_params, agg.labels, agg.corr, cohort=cohort,
+                    arrived=arrived, tamper=self._tampers(cohort, arrived))
 
             # arrived clients adopt their aggregated model; stragglers and
             # dropouts keep their previous personalized params
-            new_rows = jax.tree.map(
-                lambda x: x[jnp.asarray(np.flatnonzero(arrived))],
-                agg.stacked_params)
-            upd_ids = jnp.asarray(np.asarray(cohort)[arrived])
-            self._params = jax.tree.map(
-                lambda P, rows: P.at[upd_ids].set(rows),
-                self._params, new_rows)
+            with obs.span("round.scatter", round=r):
+                new_rows = jax.tree.map(
+                    lambda x: x[jnp.asarray(np.flatnonzero(arrived))],
+                    agg.stacked_params)
+                upd_ids = jnp.asarray(np.asarray(cohort)[arrived])
+                self._params = jax.tree.map(
+                    lambda P, rows: P.at[upd_ids].set(rows),
+                    self._params, new_rows)
 
         upd = np.asarray(cohort)[arrived]
         labels = np.asarray(labels_dev)
@@ -492,9 +544,14 @@ class SimulatedFederation:
                 # changes, so this entry compiles exactly once.  The outputs
                 # stay on device — metrics never gate the round, so the eval
                 # overlaps the next round's host work (`_finalize_history`
-                # materialises them at end of run)
-                acc, cacc = self.engine.eval_cohort(
-                    out.new_rows, arrived_w, labels_dev, ex, ey)
+                # materialises them at end of run).  Tracing blocks on them
+                # (timing attribution only — the values are unchanged).
+                with obs.span("round.eval", round=r):
+                    acc, cacc = self.engine.eval_cohort(
+                        out.new_rows, arrived_w, labels_dev, ex, ey)
+                    obs.ready(acc)
+                if obs.enabled:
+                    obs.compile_delta(self.engine.cache_sizes(), r)
                 record.accuracy = acc
                 record.cluster_accuracy = cacc
             else:
@@ -503,7 +560,8 @@ class SimulatedFederation:
                 # garbage row.  new_rows' leading dim varies with the arrival
                 # count → one jit recompile per distinct count (the engine
                 # path exists to kill exactly this).
-                record.accuracy = float(self._eval(new_rows, ex, ey))
+                with obs.span("round.eval", round=r):
+                    record.accuracy = float(self._eval(new_rows, ex, ey))
         return record
 
     # ------------------------------------------------------------------ #
@@ -595,11 +653,18 @@ class SimulatedFederation:
     def _async_flush(self, agg: BufferedAggregator, version: int,
                      global_state, snapshots: dict) -> tuple:
         """One buffer flush = one training batch + one block + one merge."""
-        cfg, pop = self.cfg, self.pop
+        with self.obs.span("flush.total", cat="flush", round=version):
+            return self._async_flush_body(agg, version, global_state,
+                                          snapshots)
+
+    def _async_flush_body(self, agg: BufferedAggregator, version: int,
+                          global_state, snapshots: dict) -> tuple:
+        cfg, pop, obs = self.cfg, self.pop, self.obs
         clients = np.array([u.client for u in agg.buffer], dtype=np.int64)
         versions = [u.version for u in agg.buffer]
         k = len(clients)
-        cx, cy = pop.cohort_data(clients)
+        with obs.span("flush.gather", cat="flush", round=version):
+            cx, cy = pop.cohort_data(clients)
 
         # chain: single-cluster CACC over the flush group
         labels = jnp.zeros((k,), jnp.int32)
@@ -609,42 +674,72 @@ class SimulatedFederation:
 
         if self.engine is not None:
             layout = self.arena.layout
-            base_rows = jnp.stack([snapshots[v] for v in versions])  # (k, N)
-            local_rows, residues, mean_loss = self.engine.async_step(
-                base_rows, cx, cy)
-            cres = self.trainer.chain_round(
-                version, None, labels, corr, cohort=clients, arrived=arrived,
-                tamper=tamper, digests=self.engine.format_digests(residues))
+            with obs.span("flush.step", cat="flush", round=version):
+                base_rows = jnp.stack(
+                    [snapshots[v] for v in versions])          # (k, N)
+                local_rows, residues, mean_loss = self.engine.async_step(
+                    base_rows, cx, cy)
+                obs.ready(local_rows)
+            if obs.enabled:
+                obs.compile_delta(self.engine.cache_sizes(), version)
+            with obs.span("flush.chain", cat="flush", round=version):
+                cres = self.trainer.chain_round(
+                    version, None, labels, corr, cohort=clients,
+                    arrived=arrived, tamper=tamper,
+                    digests=self.engine.format_digests(residues))
             staleness = np.array([version - v for v in versions], np.int64)
             w = np.asarray(staleness_weight(staleness, cfg.staleness_alpha),
                            np.float32) * cres.verified.astype(np.float32)
-            # merge through the SAME jitted collective as the legacy path
-            # (same leaf shapes -> same executable -> bit-identical replay);
-            # the unflatten/flatten round-trips are exact reshapes
-            deltas = layout.unflatten(local_rows - base_rows)
-            merged = weighted_delta_mean(deltas, jnp.asarray(w))
-            merged_row = layout.flatten(
-                jax.tree.map(lambda x: x[None], merged))[0]
-            global_state = global_state + cfg.server_lr * merged_row
+            with obs.span("flush.merge", cat="flush", round=version):
+                # merge through the SAME jitted collective as the legacy path
+                # (same leaf shapes -> same executable -> bit-identical
+                # replay); the unflatten/flatten round-trips are exact
+                # reshapes
+                deltas = layout.unflatten(local_rows - base_rows)
+                merged = weighted_delta_mean(deltas, jnp.asarray(w))
+                merged_row = layout.flatten(
+                    jax.tree.map(lambda x: x[None], merged))[0]
+                global_state = global_state + cfg.server_lr * merged_row
+                obs.ready(global_state)
             agg.buffer = []
             staleness_mean = float(staleness.mean())
+            staleness_w = w
         else:
-            base = tree_stack([snapshots[v] for v in versions])
-            local_params, mean_loss = self._local_only(base, cx, cy)
-            deltas = jax.tree.map(lambda a, b: a - b, local_params, base)
+            with obs.span("flush.step", cat="flush", round=version):
+                base = tree_stack([snapshots[v] for v in versions])
+                local_params, mean_loss = self._local_only(base, cx, cy)
+                deltas = jax.tree.map(lambda a, b: a - b, local_params, base)
+                obs.ready(mean_loss)
             # re-materialise the buffer with the actual deltas (kept lazy
             # until now so every flush trains its K clients in one vmapped
             # call)
             agg.buffer = [BufferedUpdate(int(c), tree_index(deltas, i), v)
                           for i, (c, v) in enumerate(zip(clients, versions))]
-            cres = self.trainer.chain_round(
-                version, local_params, labels, corr, cohort=clients,
-                arrived=arrived, tamper=tamper)
-            merge = agg.flush(version, gate=cres.verified.astype(np.float32))
-            global_state = jax.tree.map(
-                lambda g, d: g + cfg.server_lr * d.astype(g.dtype),
-                global_state, merge.delta)
-            staleness_mean = float(merge.staleness.mean())
+            with obs.span("flush.chain", cat="flush", round=version):
+                cres = self.trainer.chain_round(
+                    version, local_params, labels, corr, cohort=clients,
+                    arrived=arrived, tamper=tamper)
+            with obs.span("flush.merge", cat="flush", round=version):
+                merge = agg.flush(version,
+                                  gate=cres.verified.astype(np.float32))
+                global_state = jax.tree.map(
+                    lambda g, d: g + cfg.server_lr * d.astype(g.dtype),
+                    global_state, merge.delta)
+                obs.ready(global_state)
+            staleness = np.asarray(merge.staleness)
+            staleness_mean = float(staleness.mean())
+            staleness_w = np.asarray(
+                staleness_weight(staleness, cfg.staleness_alpha),
+                np.float32) * cres.verified.astype(np.float32)
+
+        if obs.enabled:
+            # staleness-weight distribution: how much each flush discounts
+            # its stale contributors (and zeroes its unverified ones)
+            for s in staleness:
+                obs.observe("async.staleness", float(s))
+            for wv in staleness_w:
+                obs.observe("async.staleness_weight", float(wv))
+            obs.point("async.staleness_mean", staleness_mean, round=version)
 
         new_version = version + 1
         self.last_labels[clients] = 0
@@ -662,10 +757,16 @@ class SimulatedFederation:
             ex, ey = self._eval_slices()
             if self.engine is not None:
                 # deferred like the sync eval: materialised at end of run
-                record.accuracy = self.engine.eval_global(global_state, ex, ey)
+                with obs.span("flush.eval", cat="flush", round=version):
+                    record.accuracy = self.engine.eval_global(
+                        global_state, ex, ey)
+                    obs.ready(record.accuracy)
+                if obs.enabled:
+                    obs.compile_delta(self.engine.cache_sizes(), version)
             else:
-                stacked = jax.tree.map(lambda g: g[None], global_state)
-                record.accuracy = float(self._eval(stacked, ex, ey))
+                with obs.span("flush.eval", cat="flush", round=version):
+                    stacked = jax.tree.map(lambda g: g[None], global_state)
+                    record.accuracy = float(self._eval(stacked, ex, ey))
         self.history.append(record)
         return new_version, global_state
 
@@ -694,11 +795,19 @@ class SimulatedFederation:
 
         n_eval = min(cfg.eval_clients, self.pop.n_clients)
         eval_ids = np.linspace(0, self.pop.n_clients - 1, n_eval).astype(int)
-        final_acc = self._evaluate_clients(eval_ids)
+        with self.obs.span("run.final_eval", cat="run") as sp:
+            final_acc = self._evaluate_clients(eval_ids)
+            sp.set(n_eval=n_eval)
+        if self.obs.enabled and self.engine is not None:
+            self.obs.compile_delta(self.engine.cache_sizes())
         ledger = self.trainer.ledger
-        return SimReport(
+        report = SimReport(
             config=cfg, history=self.history, event_log=self.event_log,
             final_accuracy=final_acc, balances=ledger.balances.copy(),
             chain_valid=self.trainer.chain.validate(),
             n_blocks=len(self.trainer.chain.blocks),
             ledger_conserved=ledger.conserved())
+        if self.obs.enabled:
+            self.obs.set_gauge("run.final_accuracy", report.final_accuracy)
+            self.obs.set_gauge("run.n_blocks", report.n_blocks)
+        return report
