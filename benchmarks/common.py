@@ -1,18 +1,18 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Import-light on purpose: jax (and everything repro that pulls it in) is
+imported inside the helpers, not at module scope, so a bench can ``import
+common`` first, resolve its runtime environment with
+``repro.launch.platform.bootstrap`` (device count / platform / XLA flags
+must land before jax initialises), and only then call into these helpers.
+"""
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.api import build_strategy, load_packed_clients, make_mlp_bundle
-from repro.core import FederatedTrainer
-from repro.models import classifier as clf
-from repro.optim import adam
-
 
 def time_us(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    import jax
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
@@ -27,6 +27,14 @@ def run_fl(dataset: str, bias: float, strategy: str, *, n_clients: int = 20,
            batch_size: int = 64, n_clusters: int = 5, seed: int = 0,
            psi: int = 32):
     """One federated training run; returns (trainer, personalized_acc)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import build_strategy, load_packed_clients, make_mlp_bundle
+    from repro.core import FederatedTrainer
+    from repro.models import classifier as clf
+    from repro.optim import adam
+
     data = load_packed_clients(dataset, n_clients, bias, n_batches=n_batches,
                                batch_size=batch_size, psi=psi, seed=seed)
     cfg, bundle = make_mlp_bundle(data.in_dim, data.num_classes)

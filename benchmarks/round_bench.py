@@ -29,9 +29,16 @@ executes in a SUBPROCESS that self-forces
 main process would split the CPU thread pool and skew the legacy/engine
 timings this file has tracked since PR 3.  The cross-process block-hash /
 balance comparison therefore doubles as a replay gate across device
-topologies.  The sharded latency column measures the replicated-cohort
-overhead on a forced CPU mesh (8 logical devices on one physical CPU);
-``per_device_arena_bytes`` is the scaling headline.
+topologies.  The cohort axis is sharded end-to-end (PR 7): each device
+trains its slice of the cohort and aggregation combines shard-local
+partials with a fixed-order tree, so the sharded latency column measures
+real cohort-parallel execution on a forced CPU mesh (8 logical devices on
+one physical CPU); ``per_device_arena_bytes`` is the scaling headline.
+
+``--mesh-shards`` also drives a shard-count sweep (1/2/4/8, capped at the
+flag) of the steady engine round — every width replaying bit-identically —
+recorded as the ``sharded_sweep`` section; ``--sweep-only`` refreshes just
+that section, merging into an existing ``BENCH_round.json``.
 
 Also asserts the paths replay identically (block hashes + balances) and
 that the engine compiled each used entry exactly once, then emits
@@ -325,6 +332,45 @@ def _async_case(n_clients: int, sample_frac: float, flushes: int,
     }
 
 
+def _sharded_sweep(n_clients: int, sample_frac: float, rounds: int,
+                   eval_examples: int, shard_counts: list[int],
+                   strategy: str = "bfln") -> dict:
+    """Steady engine round latency at each client-mesh width.
+
+    Every width must replay bit-identically to the 1-device engine (block
+    hashes + balances) and compile each used entry exactly once; widths
+    beyond the available device count run via the self-forcing
+    ``--sharded-only`` subprocess so THIS process stays single-device."""
+    rows = {}
+    base = None
+    for s in shard_counts:
+        row = (_run(True, n_clients, sample_frac, rounds, eval_examples,
+                    strategy=strategy)
+               if s == 1 else
+               _sharded_run(n_clients, sample_frac, rounds, eval_examples,
+                            s, strategy))
+        if base is None:
+            base = row
+        else:
+            assert row["block_hashes"] == base["block_hashes"], \
+                f"sharded sweep: shards={s} replay diverged"
+            assert np.array_equal(np.asarray(row["balances"]),
+                                  np.asarray(base["balances"]))
+        used = {k: v for k, v in row["compile_counts"].items() if v}
+        assert all(v == 1 for v in used.values()), \
+            f"sharded sweep: shards={s} recompiled: {row['compile_counts']}"
+        rows[str(s)] = {
+            "steady_ms": row["steady_ms"],
+            "steady_p50_ms": row["steady_p50_ms"],
+            "first_round_ms": row["first_round_ms"],
+            "per_device_arena_bytes": row["per_device_arena_bytes"],
+            "speedup_vs_1": round(base["steady_ms"] / row["steady_ms"], 2),
+        }
+    return {"shard_counts": shard_counts, "eval_examples": eval_examples,
+            "rounds": rounds, "strategy": strategy,
+            "replay_identical": True, "per_shards": rows}
+
+
 def _strategy_sweep(n_clients: int, sample_frac: float, rounds: int,
                     eval_examples: int) -> dict:
     """Steady-round engine latency for EVERY registered strategy — the
@@ -347,21 +393,27 @@ def _strategy_sweep(n_clients: int, sample_frac: float, rounds: int,
 def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
          out: str = "BENCH_round.json", heavy_eval: bool = True,
          mesh_shards: int = 8, strategy: str = "bfln", mode: str = "sync",
-         trace: bool = False) -> dict:
+         trace: bool = False, sweep_only: bool = False) -> dict:
     cases = {}
     per_strategy = None
-    if mode in ("sync", "both"):
+    sweep_rounds = max(WARMUP + 2, rounds // 5)
+    if mode in ("sync", "both") and not sweep_only:
         cases["headline_eval256"] = _case(n_clients, sample_frac, rounds, 256,
                                           mesh_shards, strategy)
         if heavy_eval:
             cases["heavy_eval1024"] = _case(n_clients, sample_frac, rounds,
                                             1024, mesh_shards, strategy)
-        sweep_rounds = max(WARMUP + 2, rounds // 5)
         per_strategy = _strategy_sweep(n_clients, sample_frac, sweep_rounds,
                                        256)
 
+    sharded_sweep = None
+    if mode in ("sync", "both") and mesh_shards > 1:
+        widths = [s for s in (1, 2, 4, 8) if s <= mesh_shards]
+        sharded_sweep = _sharded_sweep(n_clients, sample_frac, sweep_rounds,
+                                       256, widths, strategy)
+
     async_case = None
-    if mode in ("async", "both"):
+    if mode in ("async", "both") and not sweep_only:
         flushes = max(WARMUP + 2, rounds // 2)
         async_case = _async_case(n_clients, sample_frac, flushes, 256,
                                  strategy)
@@ -375,14 +427,18 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
         "strategy": strategy,
         **({"per_strategy_steady_ms": per_strategy} if per_strategy else {}),
         **cases,
+        **({"sharded_sweep": sharded_sweep} if sharded_sweep else {}),
         **({"async": async_case} if async_case else {}),
     }
-    if mode == "async" and os.path.exists(out):
-        # async-only runs merge into the existing sync results instead of
-        # clobbering them
+    if (mode == "async" or sweep_only) and os.path.exists(out):
+        # async-only / sweep-only runs merge into the existing results
+        # instead of clobbering them
         with open(out) as f:
             prev = json.load(f)
-        prev["async"] = async_case
+        if async_case is not None:
+            prev["async"] = async_case
+        if sweep_only and sharded_sweep is not None:
+            prev["sharded_sweep"] = sharded_sweep
         result = prev
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -438,15 +494,27 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
         print(f"round,strategy_{name},{row['steady_ms'] * 1e3:.0f},"
               f"engine steady round (1 compile per entry) "
               f"first_ms={row['first_round_ms']}")
+    if sharded_sweep is not None:
+        for s, row in sharded_sweep["per_shards"].items():
+            print(f"round,sweep_shards{s},{row['steady_ms'] * 1e3:.0f},"
+                  f"steady engine round at {s} shard(s) "
+                  f"speedup_vs_1={row['speedup_vs_1']:.2f} "
+                  f"arena_mb_per_device="
+                  f"{row['per_device_arena_bytes'] / 1e6:.1f}")
     if "headline_eval256" in cases:
         headline = cases["headline_eval256"]["steady_speedup"]
         print(f"round,result,{headline:.2f},-> {out}")
         if headline < 5:
             print(f"round,WARNING,0,headline speedup {headline:.2f}x below "
                   f"the 5x target")
-    else:
+    elif async_case is not None:
         print(f"round,result,{async_case['steady_flush_speedup']:.2f},"
               f"-> {out}")
+    else:
+        widest = max(sharded_sweep["per_shards"], key=int)
+        print(f"round,result,"
+              f"{sharded_sweep['per_shards'][widest]['speedup_vs_1']:.2f},"
+              f"sweep speedup at {widest} shards -> {out}")
     return result
 
 
@@ -473,6 +541,10 @@ if __name__ == "__main__":
     p.add_argument("--sharded-only", default=None, metavar="JSON",
                    help="internal worker mode: run ONLY the sharded case for "
                         "the given case params and print its metrics as JSON")
+    p.add_argument("--sweep-only", action="store_true",
+                   help="run ONLY the shard-count sweep (1/2/4/8 up to "
+                        "--mesh-shards) and merge its sharded_sweep section "
+                        "into an existing --out file")
     p.add_argument("--out", default="BENCH_round.json")
     args = p.parse_args()
     if args.sharded_only is not None:
@@ -487,4 +559,4 @@ if __name__ == "__main__":
     r = args.rounds or (10 if args.quick else 50)
     main(n_clients=n, rounds=r, out=args.out, heavy_eval=not args.quick,
          mesh_shards=args.mesh_shards, strategy=args.strategy,
-         mode=args.mode, trace=args.trace)
+         mode=args.mode, trace=args.trace, sweep_only=args.sweep_only)

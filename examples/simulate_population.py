@@ -33,24 +33,26 @@ import argparse
 import time
 
 if __name__ == "__main__":
-    # mesh mode needs the forced CPU device count BEFORE jax initialises
-    # (the repro.api import below) — pre-parse and re-exec once.  A replayed
-    # spec (--from-spec) carries its mesh width inside the JSON, so peek at
-    # the file here (plain json, no jax import) or the flag would silently
-    # win with its default of 1 and the mesh run could never replay.
+    # mesh mode needs its runtime environment (forced CPU device count,
+    # platform / x64 / extra XLA flags) resolved BEFORE jax initialises (the
+    # repro.api import below) — pre-parse and bootstrap, re-execing once if
+    # the environment had to change.  A replayed spec (--from-spec) carries
+    # its mesh section inside the JSON, so peek at the file here (plain
+    # json, no jax import) or the --mesh-shards flag would silently win
+    # with its default of 1 and the mesh run could never replay.
     import json as _json
 
-    from repro.launch.bootstrap import force_host_device_count
+    from repro.launch.platform import bootstrap
     _pre = argparse.ArgumentParser(add_help=False)
     _pre.add_argument("--mesh-shards", type=int, default=1)
     _pre.add_argument("--from-spec", default=None)
     _ns = _pre.parse_known_args()[0]
-    _shards = _ns.mesh_shards
+    _mesh = {"shards": _ns.mesh_shards}
     if _ns.from_spec:
         with open(_ns.from_spec) as _f:
-            _d = _json.load(_f)
-        _shards = max(_shards, _d.get("mesh", {}).get("shards", 1))
-    force_host_device_count(_shards)
+            _mesh = dict(_json.load(_f).get("mesh", {}))
+        _mesh["shards"] = max(_ns.mesh_shards, _mesh.get("shards", 1))
+    bootstrap({"mesh": _mesh})
 
 import numpy as np
 

@@ -156,14 +156,46 @@ class ChainSpec:
         _check(self.initial_stake >= 0, f"initial_stake must be >= 0, got {self.initial_stake}")
 
 
+#: Cohort-axis execution modes for the mesh round engine.
+COHORT_MODES = ("sharded", "replicated")
+
+
 @dataclass(frozen=True)
 class MeshSpec:
-    """Client-axis device mesh for the row-sharded parameter arena."""
+    """Client-axis device mesh for the row-sharded parameter arena.
+
+    ``cohort`` picks how the per-round cohort executes on that mesh:
+    ``"sharded"`` (default) trains each device's cohort slice locally and
+    combines shard-local aggregation partials with a fixed-order tree;
+    ``"replicated"`` gathers the whole cohort to every device (the pre-shard
+    behaviour — still bit-identical, kept as an escape hatch for strategies
+    without partial/combine stages).
+
+    ``platform`` / ``x64`` / ``xla_flags`` are process-level runtime knobs
+    resolved by :func:`repro.launch.platform.bootstrap` BEFORE jax
+    initialises — they cannot take effect once a backend exists, which is
+    why they live on the spec rather than in ad-hoc shell exports.
+    """
     shards: int = 1
+    cohort: str = "sharded"           # "sharded" | "replicated"
+    platform: str = ""                # "" = let jax pick ("cpu"/"gpu"/"tpu")
+    x64: bool = False                 # enable float64 (JAX_ENABLE_X64)
+    xla_flags: tuple[str, ...] = ()   # extra XLA_FLAGS, appended in order
 
     def __post_init__(self):
         _check(isinstance(self.shards, int) and self.shards >= 1,
                f"mesh shards must be an int >= 1, got {self.shards!r}")
+        _check(self.cohort in COHORT_MODES,
+               f"mesh cohort must be one of {COHORT_MODES}, "
+               f"got {self.cohort!r}")
+        _check(isinstance(self.platform, str),
+               f"mesh platform must be a string, got {self.platform!r}")
+        _check(isinstance(self.x64, bool),
+               f"mesh x64 must be a bool, got {self.x64!r}")
+        _check(isinstance(self.xla_flags, tuple)
+               and all(isinstance(f, str) and f for f in self.xla_flags),
+               f"mesh xla_flags must be a tuple of non-empty strings, "
+               f"got {self.xla_flags!r}")
 
 
 _SUB_SPECS = {"data": DataSpec, "train": TrainSpec, "async_": AsyncSpec,
@@ -216,7 +248,8 @@ class ExperimentSpec:
             initial_stake=c.initial_stake, eval_every=e.every,
             eval_clients=e.clients, eval_examples=e.examples,
             hidden=tuple(t.hidden), rep_dim=t.rep_dim, engine=self.engine,
-            mesh_shards=self.mesh.shards, seed=self.seed)
+            mesh_shards=self.mesh.shards, mesh_cohort=self.mesh.cohort,
+            seed=self.seed)
 
     @classmethod
     def from_flat(cls, data: DataSpec | None = None, **flat) -> "ExperimentSpec":
@@ -233,6 +266,7 @@ class ExperimentSpec:
         d = dataclasses.asdict(self)
         d["train"]["hidden"] = list(self.train.hidden)
         d["train"]["strategy_params"] = dict(self.train.strategy_params)
+        d["mesh"]["xla_flags"] = list(self.mesh.xla_flags)
         return d
 
     def to_json(self, indent: int | None = None) -> str:
@@ -255,6 +289,8 @@ class ExperimentSpec:
             sub = dict(d.get(name, {}))
             if name == "train" and "hidden" in sub:
                 sub["hidden"] = tuple(sub["hidden"])
+            if name == "mesh" and "xla_flags" in sub:
+                sub["xla_flags"] = tuple(sub["xla_flags"])
             kw[name] = sub_cls(**sub)
         for name in ("engine", "seed"):
             if name in d:

@@ -10,6 +10,21 @@ Pipeline per round (all jittable, fixed shapes):
 the same cluster receive the mean of that cluster's parameters.  With stacked
 parameters it is a one-hot membership matmul — the pure-jnp form below is the
 oracle for the ``repro.kernels.cluster_agg`` Pallas kernel.
+
+Deterministic tree reductions (``tree_sum`` / ``masked_tree_sum`` /
+``tree_cluster_mean_params``): every cohort-axis float reduction consumed by
+the fused round engine is a fixed-order adjacent-pair binary tree of explicit
+elementwise adds.  ``jnp.sum`` / ``tensordot`` leave the reduction order to
+the backend — the tree pins it in the math graph itself, so the jitted
+program matches the pure-numpy oracle bit for bit, and zero-weight (masked /
+padding) slots are where-guarded to contribute exactly +0.0 — appending them
+never changes a single output bit.  One discipline applies on a mesh: the
+reduced axis must be REPLICATED before the tree runs (the engine's combine
+stage does this).  Reducing a still-sharded axis lets GSPMD rewrite tree
+levels into cross-device collectives whose CPU codegen rounds differently
+than the single-device program — ULP drift that breaks seeded replay
+(``tests/test_tree_reduction.py`` pins both facts).  Oracles live in
+``repro.kernels.ref`` (``tree_sum_ref`` / ``tree_cluster_mean_ref``).
 """
 from __future__ import annotations
 
@@ -31,6 +46,85 @@ class PAAResult(NamedTuple):
     corr: jax.Array                # (m, m) Pearson matrix Ξ
     prototypes: jax.Array          # (m, D)
     cluster_sizes: jax.Array       # (n_clusters,)
+
+
+# --------------------------------------------------------------------------- #
+# deterministic fixed-order tree reductions (replicate-then-reduce bit identity)
+# --------------------------------------------------------------------------- #
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def tree_sum(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Fixed-order adjacent-pair binary-tree sum along ``axis``.
+
+    The reduction is unrolled into an explicit chain of elementwise adds
+    (padding the axis to the next power of two with +0.0), so the float
+    rounding sequence is a property of the *graph*: the jitted program and
+    the numpy oracle agree bit for bit, and padding within the same
+    power-of-two width is a no-op.  Callers on a mesh must replicate the
+    reduced axis first — over a sharded axis GSPMD turns tree levels into
+    cross-device collectives with different rounding (see module docstring).
+    """
+    x = jnp.moveaxis(x, axis, 0)
+    m = x.shape[0]
+    p = _next_pow2(m)
+    if p != m:
+        x = jnp.concatenate(
+            [x, jnp.zeros((p - m,) + x.shape[1:], x.dtype)], axis=0)
+    while x.shape[0] > 1:
+        h = x.shape[0] // 2
+        a = x.reshape((h, 2) + x.shape[1:])
+        x = a[:, 0] + a[:, 1]
+    return x[0]
+
+
+def masked_tree_sum(x: jax.Array, w: jax.Array, axis: int = 0) -> jax.Array:
+    """Weighted tree sum where zero-weight slots contribute EXACTLY +0.0.
+
+    ``where(w > 0, w·x, +0.0)`` guards against the two ways a dead slot
+    could still flip bits: ``-0.0`` contributions (which turn a +0.0 partial
+    into -0.0) and ``0·inf = NaN`` from garbage values in padding slots.
+    Appending zero-weight slots is therefore a bitwise no-op, which is what
+    lets the engine pad the cohort to a shard multiple.
+    """
+    wb = jnp.moveaxis(
+        w.astype(x.dtype).reshape(w.shape + (1,) * (x.ndim - 1)), 0, axis)
+    contrib = jnp.where(wb > 0, x * wb, jnp.zeros((), x.dtype))
+    return tree_sum(contrib, axis=axis)
+
+
+def tree_cluster_mean_params(stacked_params: Pytree, labels: jax.Array,
+                             n_clusters: int,
+                             weights: jax.Array | None = None) -> Pytree:
+    """Cluster-masked FedAvg via fixed-order tree segment sums.
+
+    Same semantics as :func:`cluster_mean_params` (every slot receives its
+    cluster's weighted mean, denominator clamped so an all-masked cluster
+    degrades to zeros), but each cluster's sum is a where-guarded tree over
+    the slot axis instead of a one-hot contraction — run on a replicated
+    slot axis (the engine's combine discipline) the bits match the numpy
+    oracle exactly and appending zero-weight slots is a no-op.  The
+    gather-back is a ``take`` (no second contraction).
+    """
+    m = labels.shape[0]
+    onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)      # (m, C)
+    w = jnp.ones((m,), jnp.float32) if weights is None \
+        else weights.astype(jnp.float32)
+    wo = onehot * w[:, None]                                            # (m, C)
+    denom = jnp.maximum(tree_sum(wo, axis=0), 1e-9)                     # (C,)
+
+    def leaf(x):
+        xf = x.astype(jnp.float32)
+        woT = wo.T.reshape((n_clusters, m) + (1,) * (xf.ndim - 1))
+        contrib = jnp.where(woT > 0, woT * xf[None],
+                            jnp.zeros((), jnp.float32))                 # (C, m, ...)
+        sums = tree_sum(contrib, axis=1)                                # (C, ...)
+        means = sums / denom.reshape((n_clusters,) + (1,) * (xf.ndim - 1))
+        return jnp.take(means, labels, axis=0).astype(x.dtype)          # (m, ...)
+
+    return jax.tree.map(leaf, stacked_params)
 
 
 def _cluster_weights(labels: jax.Array, n_clusters: int,

@@ -22,6 +22,24 @@ also returns a ``(k,)`` cluster-label vector and a ``(k, k)`` affinity
 matrix for the blockchain's CACC consensus: BFLN computes them from its PAA
 pipeline; flat strategies report the single-cluster view (zeros / identity),
 exactly like the async FedBuff path always has.
+
+Sharded-cohort contract: ``aggregate_cohort`` decomposes into two stages so
+the engine can run the cohort axis sharded across a device mesh —
+
+    cohort_partial(stacked_params, cx, cy, arrived_w) -> partial | None
+    cohort_combine(stacked_params, partial, arrived_w, k) -> CohortAggOut
+
+``cohort_partial`` is the shard-local half: per-slot values with a leading
+cohort axis (BFLN: client prototypes), computable on each device's cohort
+slice.  ``cohort_combine`` is the deterministic half: it may receive ``m >=
+k`` slots (the engine pads the cohort to a shard multiple; slots ``>= k``
+carry zero arrival weight) and must return a :class:`CohortAggOut` over the
+first ``k`` slots with bits INVARIANT to the padding and to how the slot
+axis was sharded — every cohort-axis float reduction inside it goes through
+the fixed-order tree primitives in ``repro.core.aggregation``.
+``aggregate_cohort`` is derived by :func:`compose_cohort`, so the
+single-device legacy oracle and the sharded engine literally share the same
+stage functions — replay parity holds by construction.
 """
 from __future__ import annotations
 
@@ -30,7 +48,12 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import cluster_mean_params, paa_round
+from repro.core.aggregation import (
+    masked_tree_sum,
+    paa_round,
+    tree_cluster_mean_params,
+    tree_sum,
+)
 from repro.core.pearson import pearson_affinity, pearson_matrix
 from repro.core.prototypes import classwise_prototypes, client_prototypes
 from repro.core.spectral import spectral_cluster
@@ -66,13 +89,21 @@ class Strategy(NamedTuple):
     local_loss: Callable[[Pytree, jax.Array, jax.Array, Any], jax.Array]
     aggregate: Callable[[Pytree, jax.Array, jax.Array], AggOut]
     # jittable mask-weighted aggregation consumed by the fused round engine;
-    # (stacked_params, cx, cy, arrived_w) -> CohortAggOut
+    # (stacked_params, cx, cy, arrived_w) -> CohortAggOut — derived from the
+    # two-stage contract below via compose_cohort()
     aggregate_cohort: Callable[
         [Pytree, jax.Array, jax.Array, jax.Array], "CohortAggOut"] | None = None
     # True: round_extras returns ONE pytree shared by every client (no
     # leading client axis) — local_train broadcasts it via in_axes=None
     # instead of shipping k redundant copies through the vmap
     shared_extras: bool = False
+    # sharded-cohort stages (see module docstring): per-slot partial values
+    # computable on a cohort shard, and the deterministic combine that
+    # tolerates zero-weight padding slots beyond k
+    cohort_partial: Callable[
+        [Pytree, jax.Array, jax.Array, jax.Array], Any] | None = None
+    cohort_combine: Callable[
+        [Pytree, Any, jax.Array, int], "CohortAggOut"] | None = None
 
 
 def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
@@ -92,23 +123,62 @@ def _global_mean(stacked_params: Pytree) -> Pytree:
     return jax.tree.map(lambda g: jnp.broadcast_to(g[None], (m,) + g.shape), mean)
 
 
-def _masked_mean(stacked_params: Pytree, arrived_w: jax.Array) -> Pytree:
-    """Mask-weighted global mean, broadcast back to every cohort slot.
+def _tree_masked_mean(stacked_params: Pytree, arrived_w: jax.Array,
+                      k: int) -> Pytree:
+    """Mask-weighted global mean, broadcast back to the first ``k`` slots.
 
     The fixed-shape form of FedAvg under partial participation: slots with
     zero arrival weight contribute nothing, and the denominator is the
     arrived count (clamped, so an empty round degrades to zeros harmlessly —
-    the engine's scatter mask drops those rows anyway).
+    the engine's scatter mask drops those rows anyway).  Tree-ordered
+    reductions keep the bits invariant to cohort sharding and to
+    zero-weight padding slots beyond ``k``.
     """
     w = arrived_w.astype(jnp.float32)
-    denom = jnp.maximum(jnp.sum(w), 1.0)
+    denom = jnp.maximum(tree_sum(w), 1.0)
 
     def leaf(x):
-        wx = x.astype(jnp.float32) * w.reshape((-1,) + (1,) * (x.ndim - 1))
-        mean = jnp.sum(wx, axis=0) / denom
-        return jnp.broadcast_to(mean[None], x.shape).astype(x.dtype)
+        mean = masked_tree_sum(x.astype(jnp.float32), w) / denom
+        return jnp.broadcast_to(mean[None], (k,) + mean.shape).astype(x.dtype)
 
     return jax.tree.map(leaf, stacked_params)
+
+
+def compose_cohort(partial_fn: Callable, combine_fn: Callable) -> Callable:
+    """Derive the one-shot ``aggregate_cohort`` from the two sharded-cohort
+    stages.  The legacy oracle driver calls this composition with ``m == k``
+    while the sharded engine calls the stages separately with ``m >= k`` —
+    same functions, same bits (the combine is padding/partition-invariant by
+    contract), so engine-vs-oracle replay parity needs no extra proof."""
+
+    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
+        part = partial_fn(stacked_params, cx, cy, arrived_w)
+        stacked_params, part = barrier_combine_inputs(stacked_params, part)
+        return combine_fn(stacked_params, part, arrived_w, cx.shape[0])
+
+    return aggregate_cohort
+
+
+def barrier_combine_inputs(stacked_params: Pytree, partial: Any):
+    """Pin the combine stage's inputs with an optimization barrier.
+
+    Without it, XLA is free to clone the producer math (local training, the
+    partial stage) into each consumer's fusion, and the clones can vectorise
+    differently — ULP-different inputs to the combine, which breaks the
+    bit-identical-replay-across-partitionings contract.  The barrier forces
+    ONE materialisation that every consumer reads, so the combine's
+    fixed-order trees see the same bits in the fused single-device program,
+    the sharded program, and the legacy oracle."""
+    if partial is None:
+        return jax.lax.optimization_barrier(stacked_params), None
+    return jax.lax.optimization_barrier((stacked_params, partial))
+
+
+def _no_partial(stacked_params, cx, cy, arrived_w):
+    """Shard-local stage for strategies whose combine needs only the trained
+    params themselves (fedavg/fedprox/fedhkd mask-weighted mean, fedproto
+    identity)."""
+    return None
 
 
 def _single_cluster_view(m: int) -> tuple[jax.Array, jax.Array]:
@@ -132,12 +202,13 @@ def make_fedavg(model: ModelBundle) -> Strategy:
     def aggregate(stacked_params, cx, cy):
         return AggOut(_global_mean(stacked_params))
 
-    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
-        return CohortAggOut(_masked_mean(stacked_params, arrived_w),
-                            *_single_cluster_view(cx.shape[0]))
+    def cohort_combine(stacked_params, partial, arrived_w, k):
+        return CohortAggOut(_tree_masked_mean(stacked_params, arrived_w, k),
+                            *_single_cluster_view(k))
 
     return Strategy("fedavg", round_extras, local_loss, aggregate,
-                    aggregate_cohort)
+                    compose_cohort(_no_partial, cohort_combine),
+                    cohort_partial=_no_partial, cohort_combine=cohort_combine)
 
 
 # --------------------------------------------------------------------------- #
@@ -159,12 +230,14 @@ def make_fedprox(model: ModelBundle, mu: float = 0.01) -> Strategy:
     def aggregate(stacked_params, cx, cy):
         return AggOut(_global_mean(stacked_params))
 
-    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
-        return CohortAggOut(_masked_mean(stacked_params, arrived_w),
-                            *_single_cluster_view(cx.shape[0]))
+    def cohort_combine(stacked_params, partial, arrived_w, k):
+        return CohortAggOut(_tree_masked_mean(stacked_params, arrived_w, k),
+                            *_single_cluster_view(k))
 
     return Strategy("fedprox", round_extras, local_loss, aggregate,
-                    aggregate_cohort, shared_extras=True)
+                    compose_cohort(_no_partial, cohort_combine),
+                    shared_extras=True,
+                    cohort_partial=_no_partial, cohort_combine=cohort_combine)
 
 
 # --------------------------------------------------------------------------- #
@@ -202,13 +275,16 @@ def make_fedproto(model: ModelBundle, lam: float = 1.0) -> Strategy:
     def aggregate(stacked_params, cx, cy):
         return AggOut(stacked_params)  # models are never averaged
 
-    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
+    def cohort_combine(stacked_params, partial, arrived_w, k):
         # personal models: arrived slots keep their freshly trained params
-        # (the engine's scatter mask drops non-arrived rows on its own)
-        return CohortAggOut(stacked_params, *_single_cluster_view(cx.shape[0]))
+        # (the engine's scatter mask drops non-arrived rows on its own);
+        # slicing to k drops the engine's shard-padding slots
+        return CohortAggOut(jax.tree.map(lambda x: x[:k], stacked_params),
+                            *_single_cluster_view(k))
 
     return Strategy("fedproto", round_extras, local_loss, aggregate,
-                    aggregate_cohort)
+                    compose_cohort(_no_partial, cohort_combine),
+                    cohort_partial=_no_partial, cohort_combine=cohort_combine)
 
 
 # --------------------------------------------------------------------------- #
@@ -256,12 +332,13 @@ def make_fedhkd(model: ModelBundle, lam_rep: float = 0.05,
     def aggregate(stacked_params, cx, cy):
         return AggOut(_global_mean(stacked_params))
 
-    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
-        return CohortAggOut(_masked_mean(stacked_params, arrived_w),
-                            *_single_cluster_view(cx.shape[0]))
+    def cohort_combine(stacked_params, partial, arrived_w, k):
+        return CohortAggOut(_tree_masked_mean(stacked_params, arrived_w, k),
+                            *_single_cluster_view(k))
 
     return Strategy("fedhkd", round_extras, local_loss, aggregate,
-                    aggregate_cohort)
+                    compose_cohort(_no_partial, cohort_combine),
+                    cohort_partial=_no_partial, cohort_combine=cohort_combine)
 
 
 # --------------------------------------------------------------------------- #
@@ -284,20 +361,36 @@ def make_bfln(model: ModelBundle, probe_x: jax.Array, n_clusters: int,
                         kmeans_iters=kmeans_iters)
         return AggOut(res.new_stacked_params, res.labels, res.cluster_sizes, res.corr)
 
-    def aggregate_cohort(stacked_params, cx, cy, arrived_w):
-        # the exact op sequence the fused engine has always traced (PAA with
-        # the arrival mask as aggregation weights) — op-for-op identical so
-        # seeded BFLN replay stays bit-identical to the pre-generic engine
-        protos = client_prototypes(model.embed_fn, stacked_params, probe_x)
-        corr = pearson_matrix(protos)
+    def cohort_partial(stacked_params, cx, cy, arrived_w):
+        # per-slot prototypes (m, D): the ONLY cross-slot input the combine
+        # needs — each device embeds the shared probe batch through its own
+        # cohort slice, and only this small matrix gets replicated
+        return client_prototypes(model.embed_fn, stacked_params, probe_x)
+
+    def cohort_combine(stacked_params, protos, arrived_w, k):
+        # PAA with the arrival mask as aggregation weights.  Pearson +
+        # spectral run on the REAL k slots only (slicing the Pearson input
+        # is per-entry exact, and the (k, k) spectral problem must match the
+        # single-device program op for op); the cluster means run over ALL
+        # m >= k slots through the fixed-order tree segment sums — padding
+        # slots carry zero weight, so their garbage params and arbitrary
+        # labels contribute exactly +0.0
+        corr = pearson_matrix(protos[:k])
         labels = spectral_cluster(pearson_affinity(corr), n_clusters,
                                   kmeans_iters)
-        new_params = cluster_mean_params(stacked_params, labels, n_clusters,
-                                         weights=arrived_w)
+        m = protos.shape[0]
+        labels_m = labels if m == k else jnp.concatenate(
+            [labels, jnp.zeros((m - k,), labels.dtype)])
+        new_params = tree_cluster_mean_params(stacked_params, labels_m,
+                                              n_clusters, weights=arrived_w)
+        if m != k:
+            new_params = jax.tree.map(lambda x: x[:k], new_params)
         return CohortAggOut(new_params, labels, corr)
 
     return Strategy("bfln", round_extras, local_loss, aggregate,
-                    aggregate_cohort)
+                    compose_cohort(cohort_partial, cohort_combine),
+                    cohort_partial=cohort_partial,
+                    cohort_combine=cohort_combine)
 
 
 STRATEGY_FACTORIES = {

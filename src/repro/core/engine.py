@@ -10,17 +10,16 @@ jit recompile per distinct count.
 The engine collapses all of it into ONE jitted, ``donate_argnums``-donated
 program per (mode, cohort_size):
 
-    arena gather → local_train → strategy.aggregate_cohort (BFLN: PAA —
+    arena gather → local_train → strategy cohort aggregation (BFLN: PAA —
     prototypes, Pearson, spectral, cluster-masked mean; baselines:
     mask-weighted means / personal models) → cohort fingerprint residues →
     masked scatter-back into the donated arena
 
 The engine is **strategy-generic**: every registered strategy
 (`repro.api.registry`) fuses into the same donated step through its
-``aggregate_cohort`` stage — BFLN keeps its exact PAA op sequence (seeded
-replay stays bit-identical to the BFLN-only engine), while the Table II
-baselines get fixed-shape mask-weighted aggregation and the single-cluster
-CACC view (labels = zeros, affinity = identity).
+cohort aggregation stages — BFLN keeps its exact PAA op sequence, while the
+Table II baselines get fixed-shape mask-weighted aggregation and the
+single-cluster CACC view (labels = zeros, affinity = identity).
 
 Arrival is a fixed-shape mask everywhere — no ``np.flatnonzero`` dynamic
 indexing, no varying leading dims — so the jit cache hits every round and
@@ -38,12 +37,25 @@ Mesh mode (``sharding=`` a client-axis ``NamedSharding`` from
 ``repro.runtime.arena.ShardedParamArena``): the arena rows stay sharded
 across the device mesh — each device holds ``n/shards`` rows and the full
 O(n_clients · N_params) matrix never materialises on one device.  The
-cohort gather is constrained to a *replicated* (k, N) block, so every
-device runs exactly the single-device cohort program (train, PAA,
-fingerprints — identical shapes, identical arithmetic, bit-identical
-seeded replay), and the masked scatter-back lands only on the rows each
-device owns.  Per-round collective traffic is O(k · N): the cohort
-all-gather in, the row updates out.
+COHORT axis is sharded end-to-end too (``cohort_mode="sharded"``): the
+cohort is padded to a shard multiple (padding slots gather row 0, train on
+zero data, and carry zero arrival weight), each device trains its slice and
+computes its slice of the batched fingerprints, and aggregation splits into
+a shard-local per-slot partial (``Strategy.cohort_partial``; BFLN: client
+prototypes) plus a deterministic combine (``Strategy.cohort_combine``) that
+runs on the REPLICATED trained cohort block — its cohort-axis reductions
+are fixed-order trees / pre-sorted segment sums (``repro.core.aggregation``)
+whose replicated program is device-local and matches the single-device
+composition bit for bit, and zero-weight padding slots are where-guarded to
+contribute exactly +0.0, so seeded replay stays bit-identical to the
+single-device engine.  Server payloads that reduce over the cohort
+(``Strategy.round_extras`` — the fedprox anchor, fedproto/fedhkd global
+prototypes) are computed replicated on the REAL ``[:k]`` slots with the
+exact single-device op sequence, then re-padded per client.  The masked
+scatter-back writes only the real cohort indices into the rows each device
+owns.  ``cohort_mode="replicated"`` keeps the PR 4 behaviour (every device
+runs the identical full-shape cohort program) for A/B comparison — it costs
+shards× redundant compute.
 """
 from __future__ import annotations
 
@@ -53,12 +65,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.baselines import barrier_combine_inputs
 from repro.core.fl import local_train
 from repro.kernels.fingerprint import fingerprint_rows, format_digest
 from repro.obs import NULL_RECORDER
 from repro.runtime.arena import ArenaLayout, bitcast_u32
 
 Pytree = Any
+
+COHORT_MODES = ("sharded", "replicated")
 
 
 class SyncRoundOut(NamedTuple):
@@ -93,6 +108,7 @@ class RoundEngine:
         local_epochs: int,
         stacked_apply_fn: Callable | None = None,
         sharding=None,                  # client-axis NamedSharding (mesh mode)
+        cohort_mode: str = "sharded",   # mesh mode: "sharded" | "replicated"
         obs=NULL_RECORDER,              # repro.obs flight recorder
     ):
         if strategy.aggregate_cohort is None:
@@ -100,24 +116,63 @@ class RoundEngine:
                 f"strategy {strategy.name!r} has no aggregate_cohort stage — "
                 "the fused round engine needs the jittable mask-weighted "
                 "aggregation (see repro.core.baselines.Strategy)")
+        if cohort_mode not in COHORT_MODES:
+            raise ValueError(
+                f"cohort_mode must be one of {COHORT_MODES}, "
+                f"got {cohort_mode!r}")
         self.layout = layout
         self.n_clusters = n_clusters
         self.strategy_name = strategy.name
         self.sharding = sharding
+        shards = sharding.mesh.devices.size if sharding is not None else 1
+        sharded_cohort = sharding is not None and shards > 1 \
+            and cohort_mode == "sharded"
+        if sharded_cohort and (strategy.cohort_partial is None
+                               or strategy.cohort_combine is None):
+            raise ValueError(
+                f"strategy {strategy.name!r} has no cohort_partial/"
+                "cohort_combine stages — sharded cohort mode needs the "
+                "two-stage contract (see repro.core.baselines); use "
+                "MeshSpec(cohort='replicated') to fall back to the "
+                "replicated cohort program")
+        # resolved mode, readable by the driver/bench for obs metadata
+        self.cohort_mode = "sharded" if sharded_cohort else (
+            "replicated" if sharding is not None else "single")
+        self.cohort_shards = shards if sharded_cohort else 1
+        pad_mult = self.cohort_shards
+
         if sharding is not None:
             from jax.sharding import NamedSharding, PartitionSpec
-            replicated = NamedSharding(sharding.mesh, PartitionSpec())
+
+            from repro.launch.sharding import cohort_shardings
+            cshard, replicated = cohort_shardings(sharding.mesh)
 
             def _rep(x):
-                """Pin cohort-sized values replicated: every device computes
-                the identical full-shape program — the bit-identity anchor."""
+                """Pin a value replicated: every device holds (and computes)
+                the identical full-shape array — the bit-identity anchor for
+                the combine stage and all O(k)-sized outputs."""
                 return jax.lax.with_sharding_constraint(x, replicated)
 
             def _shd(x):
                 """Pin the population arena to its row sharding."""
                 return jax.lax.with_sharding_constraint(x, sharding)
+
+            def _csh(x):
+                """Pin a (k_pad, ...) per-slot value to the cohort-axis
+                sharding: each device touches only its cohort slice."""
+                return jax.lax.with_sharding_constraint(x, cshard)
         else:
-            _rep = _shd = lambda x: x
+            _rep = _shd = _csh = lambda x: x
+
+        def _pad0(x, pad):
+            """Append ``pad`` zero slots along the leading (cohort) axis."""
+            if pad == 0:
+                return x
+            return jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+        def _cohort_pad(k: int) -> int:
+            return (-(-k // pad_mult) * pad_mult) - k if sharded_cohort else 0
 
         def _client_accs(params, ex, ey):
             """(m,) per-client accuracy on the shared eval batch.  Uses the
@@ -131,46 +186,125 @@ class RoundEngine:
             hits = (jnp.argmax(logits, axis=-1) == ey[None, :])
             return jnp.mean(hits.astype(jnp.float32), axis=1)
 
-        def _train(cohort_params, cx, cy):
+        def _train(cohort_params, cx, cy, extras):
             opt_state = jax.vmap(opt.init)(cohort_params)
-            extras = strategy.round_extras(cohort_params, cx, cy)
-            return local_train(strategy.local_loss, opt, cohort_params,
-                               opt_state, cx, cy, extras, local_epochs,
-                               shared_extras=strategy.shared_extras)
+            res = local_train(strategy.local_loss, opt, cohort_params,
+                              opt_state, cx, cy, extras, local_epochs,
+                              shared_extras=strategy.shared_extras)
+            # pin the trained params: every downstream consumer (fingerprint,
+            # partial, combine, scatter) must read ONE materialisation — XLA
+            # otherwise clones training math into consumer fusions that can
+            # vectorise differently, and ULP-divergent clones break replay
+            # bit-identity across partitionings (see
+            # repro.core.baselines.barrier_combine_inputs)
+            return jax.lax.optimization_barrier(res)
+
+        def _pad_extras(extras, pad):
+            """Per-client server payloads get zero padding slots; a shared
+            payload (no client axis) ships as-is."""
+            if strategy.shared_extras or pad == 0:
+                return extras
+            return jax.tree.map(lambda e: _pad0(e, pad), extras)
 
         def _sync_step(arena, cohort_idx, cx, cy, arrived):
-            # (k, N) gather; mesh mode all-gathers ONLY the cohort rows to a
-            # replicated block (O(k·N) bytes), never the arena
-            rows = _rep(arena[cohort_idx])
-            res = _train(layout.unflatten(rows), cx, cy)
-            # aggregation over ALL cohort slots (stragglers burn local compute
-            # too); only the aggregation weights honour the arrival mask.
-            # BFLN's stage keeps cluster-masked FedAvg per-leaf (same dot
-            # shapes as the legacy driver -> same GEMM blocking ->
-            # bit-identical replay at every cohort size; the flat
-            # `cluster_mean_rows` form is the same math but a (C,k)x(k,N)
-            # contraction blocks differently at k≈100 — it remains the TPU
-            # cluster_agg kernel path).
-            agg = strategy.aggregate_cohort(res.params, cx, cy, arrived)
-            local_rows = layout.flatten(res.params)
-            residues = fingerprint_rows(bitcast_u32(local_rows))
+            k = cohort_idx.shape[0]
+            pad = _cohort_pad(k)
+            if sharded_cohort:
+                # padding slots gather row 0 (any valid row — their outputs
+                # are sliced away and their arrival weight is zero)
+                idx_p = jnp.concatenate(
+                    [cohort_idx, jnp.zeros((pad,), cohort_idx.dtype)]) \
+                    if pad else cohort_idx
+                # shard-aware gather: each device receives only its cohort
+                # slice — no replicated (k, N) block materialises
+                rows = _csh(arena[idx_p])
+                cx_p, cy_p = _csh(_pad0(cx, pad)), _csh(_pad0(cy, pad))
+                arrived_p = _pad0(arrived, pad)
+                # server payload on the replicated REAL slots with the exact
+                # single-device op sequence: round_extras may reduce over
+                # the cohort (fedprox anchor, fedproto/fedhkd global
+                # prototypes) and must never see padding slots.  Inputs AND
+                # outputs are pinned replicated — leaving the output free
+                # lets GSPMD back-propagate the training consumer's cohort
+                # sharding through the broadcast into the reduction,
+                # rewriting it into partial sums + all-reduce (ULP flips)
+                rows_real = _rep(rows[:k])
+                extras = _pad_extras(jax.tree.map(_rep, strategy.round_extras(
+                    layout.unflatten(rows_real), _rep(cx), _rep(cy))), pad)
+                res = _train(layout.unflatten(rows), cx_p, cy_p, extras)
+                # shard-local per-slot partial (BFLN: prototypes); only this
+                # small matrix replicates into the deterministic combine —
+                # whose cohort-axis reductions are fixed-order trees, so the
+                # bits match the single-device composition exactly
+                partial = strategy.cohort_partial(res.params, cx_p, cy_p,
+                                                  arrived_p)
+                if partial is not None:
+                    partial = jax.tree.map(_rep, partial)
+                # the combine runs fully REPLICATED: left cohort-sharded,
+                # GSPMD rewrites the fixed-order tree levels into pair
+                # all-reduces whose rounding path diverges from the
+                # single-device composition by 1 ULP at near-halfway cases.
+                # Replicating first keeps every combine op device-local and
+                # bit-identical to mesh_shards=1; only the small (k_pad, N)
+                # cohort block replicates, never the (n, N) arena.
+                sp_rep = jax.tree.map(_rep, res.params)
+                sp_b, partial_b = barrier_combine_inputs(sp_rep, partial)
+                agg = strategy.cohort_combine(sp_b, partial_b, arrived_p, k)
+                local_rows = layout.flatten(res.params)    # (k_pad, N) sharded
+                residues = fingerprint_rows(bitcast_u32(local_rows))[:k]
+                mean_loss = jnp.mean(res.mean_loss[:k])
+                prev_rows = rows[:k]
+            else:
+                rows = _rep(arena[cohort_idx])
+                extras = strategy.round_extras(layout.unflatten(rows), cx, cy)
+                res = _train(layout.unflatten(rows), cx, cy, extras)
+                # aggregation over ALL cohort slots (stragglers burn local
+                # compute too); only the aggregation weights honour the
+                # arrival mask
+                agg = strategy.aggregate_cohort(res.params, cx, cy, arrived)
+                local_rows = layout.flatten(res.params)
+                residues = fingerprint_rows(bitcast_u32(local_rows))
+                mean_loss = jnp.mean(res.mean_loss)
+                prev_rows = rows
             new_rows = layout.flatten(agg.stacked_params)
             # masked scatter-back: arrived slots adopt their aggregated
-            # params, everyone else keeps their previous personalized row
-            upd = jnp.where(arrived[:, None] > 0, new_rows, rows)
-            # mesh mode: each device scatters only into the rows it owns, so
-            # the donated arena stays row-sharded end to end
+            # params, everyone else keeps their previous personalized row.
+            # Only the k REAL indices are written (a padded scatter would
+            # race its duplicate row-0 slots), and each device lands only
+            # the rows it owns — the donated arena stays row-sharded.
+            upd = jnp.where(arrived[:, None] > 0, new_rows, prev_rows)
             arena = _shd(arena.at[cohort_idx].set(upd))
             return arena, SyncRoundOut(agg.labels, agg.corr, residues,
-                                       jnp.mean(res.mean_loss), upd)
+                                       mean_loss, upd)
 
         def _async_step(base_rows, cx, cy):
             """FedBuff flush batch: local updates + digests, no aggregation.
             The merge is gated by chain verification (a host decision) and
             reuses the same jitted ``weighted_delta_mean`` collective as the
-            legacy driver — it is O(k·N) and sharing the executable keeps
-            replay bit-identical across engine on/off."""
-            res = _train(layout.unflatten(base_rows), cx, cy)
+            legacy driver — a fixed-order tree over replicated buffer rows,
+            so sharing the executable keeps replay bit-identical across
+            engine on/off and across mesh widths."""
+            k = base_rows.shape[0]
+            pad = _cohort_pad(k)
+            if sharded_cohort:
+                rows = _csh(_pad0(base_rows, pad))
+                cx_p, cy_p = _csh(_pad0(cx, pad)), _csh(_pad0(cy, pad))
+                # extras replicated end-to-end, as in the sync step: the
+                # flush-batch rows feed both the sharded training gather and
+                # the cohort-reducing server payload, and the latter must
+                # keep the single-device op sequence
+                extras = _pad_extras(jax.tree.map(_rep, strategy.round_extras(
+                    layout.unflatten(_rep(base_rows)), _rep(cx), _rep(cy))),
+                    pad)
+                res = _train(layout.unflatten(rows), cx_p, cy_p, extras)
+                local_rows_p = layout.flatten(res.params)
+                residues = fingerprint_rows(bitcast_u32(local_rows_p))[:k]
+                local_rows = _rep(local_rows_p[:k])
+                mean_loss = jnp.mean(res.mean_loss[:k])
+                return local_rows, residues, mean_loss
+            extras = strategy.round_extras(layout.unflatten(base_rows),
+                                           cx, cy)
+            res = _train(layout.unflatten(base_rows), cx, cy, extras)
             local_rows = layout.flatten(res.params)
             residues = fingerprint_rows(bitcast_u32(local_rows))
             return local_rows, residues, jnp.mean(res.mean_loss)
@@ -179,9 +313,17 @@ class RoundEngine:
             """Fixed-shape mask-weighted cohort accuracy (the jnp-generic
             reference is ``repro.core.fl.masked_global_evaluate``).  Takes
             the cohort's (k, N) rows — NOT the arena — so a deferred eval
-            never blocks the next round's arena donation."""
-            params = layout.unflatten(cohort_rows)
-            accs = _client_accs(params, ex, ey)
+            never blocks the next round's arena donation.  In sharded mode
+            the per-client forwards shard over the cohort axis; the scalar
+            combine runs on the replicated (k,) accuracies with the exact
+            single-device op sequence."""
+            k = cohort_rows.shape[0]
+            pad = _cohort_pad(k)
+            if sharded_cohort:
+                rows = _csh(_pad0(cohort_rows, pad))
+                accs = _rep(_client_accs(layout.unflatten(rows), ex, ey)[:k])
+            else:
+                accs = _client_accs(layout.unflatten(cohort_rows), ex, ey)
             w = arrived.astype(jnp.float32)
             acc = jnp.sum(accs * w) / jnp.maximum(jnp.sum(w), 1.0)
             onehot = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32) \
@@ -195,6 +337,16 @@ class RoundEngine:
             return _client_accs(layout.unflatten(global_row[None]), ex, ey)[0]
 
         def _eval_population(arena, ids, ex, ey):
+            n = ids.shape[0]
+            pad = _cohort_pad(n)
+            if sharded_cohort:
+                # duplicate id 0 into the padding slots; their accuracies
+                # are sliced away before the mean
+                ids_p = jnp.concatenate(
+                    [ids, jnp.zeros((pad,), ids.dtype)]) if pad else ids
+                rows = _csh(arena[ids_p])
+                accs = _rep(_client_accs(layout.unflatten(rows), ex, ey)[:n])
+                return jnp.mean(accs)
             rows = _rep(arena[ids])       # replicate only the sampled rows
             return jnp.mean(_client_accs(layout.unflatten(rows), ex, ey))
 

@@ -1,8 +1,13 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets), plus
+pure-numpy single-device oracles for the deterministic tree reductions
+(the BITWISE targets — IEEE-754 elementwise adds/muls round identically in
+numpy and XLA, so these pin the exact result the sharded engine must
+reproduce at every mesh width)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def pearson_ref(protos: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
@@ -32,6 +37,54 @@ def fingerprint_ref(flat_u32: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     a = jnp.sum(x * weights[0][None, :], axis=1, dtype=jnp.uint32)
     b = jnp.sum(x * weights[1][None, :], axis=1, dtype=jnp.uint32)
     return jnp.stack([a, b], axis=1)
+
+
+def tree_sum_ref(x: np.ndarray, axis: int = 0) -> np.ndarray:
+    """Single-device oracle for ``repro.core.aggregation.tree_sum``: the
+    same fixed-order adjacent-pair binary tree (pad to the next power of two
+    with +0.0), evaluated in numpy.  Elementwise IEEE adds have one correct
+    rounding, so this matches the jitted tree bit for bit — provided the
+    jitted reduction runs with the reduced axis replicated, the engine's
+    combine discipline (``tests/test_tree_reduction.py``)."""
+    x = np.moveaxis(np.asarray(x), axis, 0)
+    m = x.shape[0]
+    p = 1 if m <= 1 else 1 << (m - 1).bit_length()
+    if p != m:
+        x = np.concatenate(
+            [x, np.zeros((p - m,) + x.shape[1:], x.dtype)], axis=0)
+    while x.shape[0] > 1:
+        a = x.reshape((x.shape[0] // 2, 2) + x.shape[1:])
+        x = a[:, 0] + a[:, 1]
+    return x[0]
+
+
+def masked_tree_sum_ref(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Oracle for ``masked_tree_sum`` over axis 0: where-guarded weighted
+    contributions (+0.0 for zero-weight slots) tree-summed."""
+    x = np.asarray(x)
+    wb = np.asarray(w, x.dtype).reshape((-1,) + (1,) * (x.ndim - 1))
+    contrib = np.where(wb > 0, x * wb, x.dtype.type(0.0))
+    return tree_sum_ref(contrib, axis=0)
+
+
+def tree_cluster_mean_ref(rows: np.ndarray, labels: np.ndarray,
+                          n_clusters: int,
+                          weights: np.ndarray | None = None) -> np.ndarray:
+    """Oracle for ``tree_cluster_mean_params`` on a flat (m, N) matrix:
+    per-cluster where-guarded tree segment sums, clamped denominator,
+    gather-back by label."""
+    rows = np.asarray(rows, np.float32)
+    m = rows.shape[0]
+    labels = np.asarray(labels)
+    w = np.ones((m,), np.float32) if weights is None \
+        else np.asarray(weights, np.float32)
+    onehot = np.zeros((m, n_clusters), np.float32)
+    onehot[np.arange(m), labels] = 1.0
+    wo = onehot * w[:, None]                                        # (m, C)
+    denom = np.maximum(tree_sum_ref(wo, axis=0), np.float32(1e-9))  # (C,)
+    means = np.stack([masked_tree_sum_ref(rows, wo[:, c]) / denom[c]
+                      for c in range(n_clusters)])                  # (C, N)
+    return means[labels]
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):

@@ -87,9 +87,10 @@ def make_client_mesh(shards: int):
     arena (`repro.runtime.arena.ShardedParamArena`) over ``shards`` devices.
 
     This is the federation scaling axis: population state is
-    O(n_clients · N_params), while per-round compute touches only O(cohort)
-    rows — so the arena rows spread across devices and the cohort working
-    set replicates.  On CPU, force multiple host devices with
+    O(n_clients · N_params) and spreads across devices as arena rows, while
+    the per-round cohort axis shards over the SAME mesh (each device trains
+    its slice of the cohort; `repro.launch.sharding.cohort_shardings` builds
+    the constraint pair).  On CPU, force multiple host devices with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* the
     first jax call (CI's mesh leg and the sharded tests do exactly this).
     """

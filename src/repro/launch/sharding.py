@@ -108,6 +108,26 @@ def param_pspecs(cfg, params_shape: Pytree, mesh) -> Pytree:
     return jax.tree_util.tree_map_with_path(rule, params_shape)
 
 
+# --------------------------------------------------------------------------- #
+# federation cohort axis (1-D client mesh, repro.launch.mesh.make_client_mesh)
+# --------------------------------------------------------------------------- #
+
+def cohort_pspec(ndim: int = 1) -> P:
+    """Leading-axis cohort sharding for ``(k_pad, ...)`` per-slot values —
+    trailing dims replicate.  ``k_pad`` is the cohort padded to a shard
+    multiple by the round engine."""
+    from repro.launch.mesh import CLIENT_AXIS
+    return P(CLIENT_AXIS, *(None,) * (ndim - 1))
+
+
+def cohort_shardings(mesh) -> tuple[NamedSharding, NamedSharding]:
+    """The (cohort-sharded, replicated) NamedSharding pair the round engine
+    constrains with: per-slot tensors (params, batches, fingerprint inputs)
+    pin to the first so each device computes only its cohort slice; combine
+    inputs/outputs (prototypes, labels, scalars) pin to the second."""
+    return NamedSharding(mesh, cohort_pspec()), NamedSharding(mesh, P())
+
+
 def opt_state_pspecs(opt_shape: Pytree, param_specs_tree: Pytree) -> Pytree:
     """Optimizer moments (m / v / mu) inherit the parameter sharding; step
     counters replicate."""

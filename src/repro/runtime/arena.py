@@ -196,13 +196,16 @@ class ShardedParamArena(ParamArena):
     1-D device mesh on the client axis (`repro.launch.mesh.make_client_mesh`).
 
     Population state is the O(n_clients · N_params) scaling wall; the cohort
-    working set is only O(k · N).  So the arena rows spread over the mesh
-    (each device holds ``n_padded / shards`` rows) while the round engine
-    gathers the cohort to a *replicated* (k, N) block, computes exactly the
-    single-device program on it, and masked-scatters back into the rows each
-    device owns — the full arena never materialises on one device, and the
-    replicated cohort compute keeps seeded replay bit-identical to the
-    unsharded engine.
+    working set is only O(k · N).  The arena rows spread over the mesh (each
+    device holds ``n_padded / shards`` rows), and the round engine shards the
+    *cohort* axis over the same mesh: the gather lands each device its own
+    cohort slice (never a replicated (k, N) block), local training and
+    batched fingerprints run shard-local, and aggregation combines
+    shard-local partials with fixed-order tree reductions
+    (`repro.core.aggregation`) whose bits do not depend on the partition
+    layout — so the full arena never materialises on one device AND seeded
+    replay stays bit-identical to the unsharded engine.  The masked
+    scatter-back writes only the rows each device owns.
 
     Rows are zero-padded up to a multiple of the shard count (0.4.x
     NamedShardings require divisible dims); padding rows sit beyond every

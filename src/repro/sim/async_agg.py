@@ -11,12 +11,13 @@ trained against version ``v`` but merges at version ``v'`` has staleness
 
 so slow clients still contribute but cannot drag the model backwards.
 
-The merge itself is the repo's one true weighted-mean collective —
-``cluster_mean_params`` with a single cluster — so the jittable inner program
-is shared with the synchronous PAA path (one kernel to optimise, one oracle
-to test against).  Chain integration is the caller's job: the driver gates
-merge weights with CACC verification, so tampered updates carry zero weight
-*and* zero reward.
+The merge itself is the repo's one true weighted-mean collective — the
+fixed-order tree reduction from ``repro.core.aggregation`` — so the jittable
+inner program is shared by the fused engine and the legacy driver, and it
+always runs on replicated (host-staged) buffer rows, which keeps async
+seeded replay identical across mesh widths.  Chain
+integration is the caller's job: the driver gates merge weights with CACC
+verification, so tampered updates carry zero weight *and* zero reward.
 """
 from __future__ import annotations
 
@@ -27,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import cluster_mean_params
+from repro.core.aggregation import masked_tree_sum, tree_sum
 from repro.utils.tree import tree_index, tree_stack
 
 Pytree = Any
@@ -42,12 +43,18 @@ def staleness_weight(staleness: jax.Array | np.ndarray,
 
 @jax.jit
 def weighted_delta_mean(stacked_deltas: Pytree, weights: jax.Array) -> Pytree:
-    """Normalised weighted mean over the leading buffer axis, via the shared
-    single-cluster ``cluster_mean_params`` collective (all-zero labels)."""
-    k = weights.shape[0]
-    labels = jnp.zeros((k,), jnp.int32)
-    merged = cluster_mean_params(stacked_deltas, labels, 1, weights=weights)
-    return tree_index(merged, 0)
+    """Normalised weighted mean over the leading buffer axis, via the
+    deterministic fixed-order tree (zero-weight slots are where-guarded to
+    exactly +0.0, denominator clamped like the single-cluster collective it
+    replaced)."""
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(tree_sum(w), 1e-9)
+
+    def leaf(x):
+        return (masked_tree_sum(x.astype(jnp.float32), w) / denom) \
+            .astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked_deltas)
 
 
 @dataclass(frozen=True)

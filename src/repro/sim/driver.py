@@ -123,6 +123,9 @@ class SimConfig:
                                       # a device mesh (engine mode only); on
                                       # CPU force devices with XLA_FLAGS=
                                       # --xla_force_host_platform_device_count=N
+    mesh_cohort: str = "sharded"      # cohort axis on that mesh: "sharded"
+                                      # slices + tree-combines, "replicated"
+                                      # gathers the cohort to every device
     seed: int = 0
 
     def __post_init__(self):
@@ -182,7 +185,7 @@ class SimConfig:
                           examples=self.eval_examples),
             chain=ChainSpec(total_reward=self.total_reward, rho=self.rho,
                             initial_stake=self.initial_stake),
-            mesh=MeshSpec(shards=self.mesh_shards),
+            mesh=MeshSpec(shards=self.mesh_shards, cohort=self.mesh_cohort),
             engine=self.engine, seed=self.seed)
 
 
@@ -319,6 +322,7 @@ class SimulatedFederation:
                 n_clusters=n_clusters, local_epochs=epochs,
                 stacked_apply_fn=functools.partial(clf.apply_stacked, mcfg),
                 sharding=getattr(self.arena, "sharding", None),
+                cohort_mode=config.mesh_cohort,
                 obs=self.obs)
             if self.obs.enabled:
                 self.obs.set_gauge("arena.bytes", int(self.arena.data.nbytes))
@@ -326,12 +330,20 @@ class SimulatedFederation:
                 self.obs.set_gauge(
                     "arena.per_device_bytes",
                     int(per_dev()) if per_dev else int(self.arena.data.nbytes))
-                # per-round cohort collective traffic: the replicated (k, N)
-                # gather in + the row updates out (see repro.core.engine)
+                # per-round cohort collective traffic (see repro.core.engine):
+                # sharded cohort moves each device's slice in/out plus the
+                # replicated combine block; replicated mode gathers the full
+                # (k, N) block in and scatters the row updates out
                 k = max(1, int(round(config.sample_frac * n)))
-                self.obs.set_gauge(
-                    "engine.cohort_bytes",
-                    2 * k * self.arena.layout.n_params * 4)
+                n_params = self.arena.layout.n_params
+                if self.engine.cohort_mode == "sharded":
+                    s = self.engine.cohort_shards
+                    k_pad = -(-k // s) * s
+                    per_dev_slice = (k_pad // s) * n_params * 4
+                    traffic = 2 * per_dev_slice + k_pad * n_params * 4
+                else:
+                    traffic = 2 * k * n_params * 4
+                self.obs.set_gauge("engine.cohort_bytes", traffic)
         self.trainer.attach_obs(self.obs)
 
         # ------- legacy (pre-arena) jitted programs, kept as the oracle ---- #
@@ -490,7 +502,9 @@ class SimulatedFederation:
             # ONE donated device program: gather → train → PAA → digests →
             # masked scatter-back; the host sees only O(cohort) bytes
             cohort_idx = jnp.asarray(cohort)
-            with obs.span("round.step", round=r):
+            with obs.span("round.step", round=r,
+                          shards=self.engine.cohort_shards,
+                          cohort_mode=self.engine.cohort_mode):
                 self.arena.data, out = self.engine.sync_step(
                     self.arena.data, cohort_idx, cx, cy, arrived_w)
                 obs.ready(out)
@@ -674,7 +688,9 @@ class SimulatedFederation:
 
         if self.engine is not None:
             layout = self.arena.layout
-            with obs.span("flush.step", cat="flush", round=version):
+            with obs.span("flush.step", cat="flush", round=version,
+                          shards=self.engine.cohort_shards,
+                          cohort_mode=self.engine.cohort_mode):
                 base_rows = jnp.stack(
                     [snapshots[v] for v in versions])          # (k, N)
                 local_rows, residues, mean_loss = self.engine.async_step(

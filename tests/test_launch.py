@@ -28,6 +28,69 @@ def test_make_client_mesh_shapes_and_device_guard():
         make_client_mesh(n + 1)
 
 
+def test_platform_resolve_env_pure():
+    """repro.launch.platform.resolve_env: returns only the vars that must
+    change, from a raw spec dict / mesh section / MeshSpec-shaped object,
+    without ever importing jax."""
+    from repro.launch.platform import resolve_env
+
+    # full spec dict, empty environment: shards force the CPU device count
+    up = resolve_env({"mesh": {"shards": 8}}, environ={})
+    assert up == {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+    # bare mesh section + platform/x64/extra flags
+    up = resolve_env({"shards": 2, "platform": "cpu", "x64": True,
+                      "xla_flags": ["--xla_cpu_multi_thread_eigen=false"]},
+                     environ={})
+    assert up["JAX_PLATFORMS"] == "cpu"
+    assert up["JAX_ENABLE_X64"] == "1"
+    assert up["XLA_FLAGS"].split() == [
+        "--xla_cpu_multi_thread_eigen=false",
+        "--xla_force_host_platform_device_count=2"]
+
+    # idempotence: an environment that already matches needs no updates
+    env = dict(up, JAX_PLATFORMS="cpu", JAX_ENABLE_X64="1")
+    assert resolve_env({"shards": 2, "platform": "cpu", "x64": True,
+                        "xla_flags": ["--xla_cpu_multi_thread_eigen=false"]},
+                       environ=env) == {}
+
+    # a larger already-forced count is never shrunk; a smaller one grows
+    big = {"XLA_FLAGS": "--xla_force_host_platform_device_count=16"}
+    assert resolve_env({"mesh": {"shards": 8}}, environ=big) == {}
+    small = {"XLA_FLAGS": "--xla_force_host_platform_device_count=2"}
+    up = resolve_env({"mesh": {"shards": 8}}, environ=small)
+    assert up["XLA_FLAGS"] == "--xla_force_host_platform_device_count=8"
+
+    # non-cpu platform: no forced host device count
+    assert resolve_env({"mesh": {"shards": 8, "platform": "gpu"}},
+                       environ={}) == {"JAX_PLATFORMS": "gpu"}
+
+    # MeshSpec itself works as the section (attr access path)
+    from repro.api import MeshSpec
+    assert resolve_env(MeshSpec(shards=4), environ={}) == {
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
+
+
+def test_platform_bootstrap_subprocess_reexec(tmp_path):
+    """End-to-end: bootstrap() after jax import re-execs once (the re-exec
+    replays ``sys.argv``, so this must be a real script file), and the
+    re-exec'd process sees the forced device count without looping."""
+    import os
+    script = tmp_path / "boot.py"
+    script.write_text(
+        "import jax\n"                           # jax initialised too early…
+        "from repro.launch.platform import bootstrap\n"
+        "bootstrap({'mesh': {'shards': 4}})\n"   # …so this re-execs
+        "print('DEVS', len(jax.devices()))\n")
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, str(script)], text=True,
+                         capture_output=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "DEVS 4" in out.stdout
+
+
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_step_cost_defined_for_all_runnable_combos(arch):
     for shape_name, shape in SHAPES.items():

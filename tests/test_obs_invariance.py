@@ -97,9 +97,21 @@ def test_trace_records_chain_and_phase_spans(tmp_path):
 
 
 @mesh8
-def test_traced_replay_identical_mesh8(tmp_path):
-    _assert_traced_replay_identical(tmp_path, mode="sync", engine=True,
-                                    mesh_shards=8)
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_traced_replay_identical_mesh8(tmp_path, mode):
+    """Tracing stays out of band under cohort sharding too — sync rounds
+    AND FedBuff flushes through the sharded step, traced vs untraced,
+    replay bit-identical (the `round.step`/`flush.step` spans additionally
+    carry `shards`/`cohort_mode` attrs; schema in docs/TRACE_SCHEMA.md)."""
+    res = _assert_traced_replay_identical(tmp_path, mode=mode, engine=True,
+                                          mesh_shards=8)
+    import json
+    step = "round.step" if mode == "sync" else "flush.step"
+    attrs = [rec.get("attrs", {})
+             for rec in map(json.loads, open(res.manifest["trace_path"]))
+             if rec["kind"] == "span" and rec["name"] == step]
+    assert attrs and all(a.get("shards") == 8 and
+                         a.get("cohort_mode") == "sharded" for a in attrs)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,254 @@
+"""Deterministic tree reductions vs their single-device numpy oracles.
+
+The fused round engine's bit-identical replay across mesh widths rests on
+one numerical contract (``repro.core.aggregation``): every cohort-axis
+float reduction is a fixed-order adjacent-pair binary tree whose rounding
+sequence is pinned in the graph, and zero-weight (masked / padding) slots
+are where-guarded to contribute EXACTLY +0.0.  These tests pin that
+contract against the pure-numpy oracles in ``repro.kernels.ref`` —
+elementwise IEEE adds have one correct rounding, so jit and numpy must
+agree bit for bit — across ragged lengths, permuted layouts, appended
+zero-weight padding, garbage in dead slots, zero-arrival clusters, and
+(on a mesh) cohort blocks that arrive sharded at shard counts 1/2/4/8 and
+are replicated before reducing — the engine's combine discipline.
+
+Property-based exploration runs under ``hypothesis`` when installed;
+the seeded-numpy sweeps below always run.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    masked_tree_sum,
+    tree_cluster_mean_params,
+    tree_sum,
+)
+from repro.kernels.ref import (
+    masked_tree_sum_ref,
+    tree_cluster_mean_ref,
+    tree_sum_ref,
+)
+
+N_DEV = len(jax.devices())
+mesh8 = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _bits(x) -> np.ndarray:
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def _assert_bitwise(actual, expected):
+    np.testing.assert_array_equal(_bits(actual), _bits(expected))
+
+
+# --------------------------------------------------------------------------- #
+# jit vs numpy oracle — always run
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("m", [1, 2, 3, 5, 8, 13, 16, 31])
+def test_tree_sum_matches_oracle(m):
+    rng = np.random.default_rng(100 + m)
+    x = (rng.standard_normal((m, 7)) * rng.choice(
+        [1e-8, 1.0, 1e8], size=(m, 7))).astype(np.float32)
+    _assert_bitwise(jax.jit(tree_sum)(jnp.asarray(x)), tree_sum_ref(x))
+    # non-leading axis reduces through the same moveaxis path
+    _assert_bitwise(jax.jit(lambda a: tree_sum(a, axis=1))(jnp.asarray(x.T)),
+                    tree_sum_ref(x.T, axis=1))
+
+
+@pytest.mark.parametrize("m,n_zero", [(6, 2), (10, 3), (16, 0), (16, 16)])
+def test_masked_tree_sum_matches_oracle_and_guards_dead_slots(m, n_zero):
+    rng = np.random.default_rng(7 * m + n_zero)
+    x = rng.standard_normal((m, 5)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, size=m).astype(np.float32)
+    dead = rng.choice(m, size=n_zero, replace=False)
+    w[dead] = 0.0
+    # garbage in dead slots must be where-guarded into exact +0.0
+    x[dead] = np.float32(np.inf)
+    got = jax.jit(masked_tree_sum)(jnp.asarray(x), jnp.asarray(w))
+    _assert_bitwise(got, masked_tree_sum_ref(x, w))
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_masked_tree_sum_zero_weight_padding_is_bitwise_noop():
+    """The engine's cohort padding contract: appending zero-weight slots
+    (with arbitrary values) never changes a single output bit.
+
+    The jit-vs-jit comparison stays within one padded power-of-two tree
+    width (how the engine pads: k and k_pad share ``next_pow2``): at some
+    larger widths XLA CPU contracts the weight multiply into the tree adds
+    (FMA), flipping ULPs relative to a *differently shaped* program.  The
+    numpy oracle has no such freedom, so its padding invariance is asserted
+    unconditionally, across the power-of-two boundary too."""
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((10, 6)).astype(np.float32)
+    w = rng.uniform(0.1, 1.0, size=10).astype(np.float32)
+    base = jax.jit(masked_tree_sum)(jnp.asarray(x), jnp.asarray(w))
+    for pad in (1, 2, 6):                 # 10 + pad <= 16 == next_pow2(10)
+        xp = np.concatenate(
+            [x, np.full((pad, 6), np.nan, np.float32)], axis=0)
+        wp = np.concatenate([w, np.zeros(pad, np.float32)])
+        _assert_bitwise(jax.jit(masked_tree_sum)(jnp.asarray(xp),
+                                                 jnp.asarray(wp)), base)
+    for pad in (1, 6, 22, 54):            # oracle: any pad is a no-op
+        xp = np.concatenate([x, np.zeros((pad, 6), np.float32)], axis=0)
+        wp = np.concatenate([w, np.zeros(pad, np.float32)])
+        _assert_bitwise(masked_tree_sum_ref(xp, wp), masked_tree_sum_ref(x, w))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_tree_cluster_mean_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    m, n, c = 12, 9, 3
+    rows = rng.standard_normal((m, n)).astype(np.float32)
+    labels = rng.integers(0, c, size=m)
+    weights = rng.uniform(0.0, 2.0, size=m).astype(np.float32)
+    got = jax.jit(tree_cluster_mean_params, static_argnums=2)(
+        jnp.asarray(rows), jnp.asarray(labels), c, jnp.asarray(weights))
+    _assert_bitwise(got, tree_cluster_mean_ref(rows, labels, c, weights))
+
+
+def test_tree_cluster_mean_permuted_layout_consistent_with_oracle():
+    """Permuting the slot layout permutes the outputs through the oracle the
+    same way — membership is by label, not by slot position."""
+    rng = np.random.default_rng(21)
+    m, n, c = 16, 8, 4
+    rows = rng.standard_normal((m, n)).astype(np.float32)
+    labels = rng.integers(0, c, size=m)
+    fn = jax.jit(tree_cluster_mean_params, static_argnums=2)
+    for pseed in range(3):
+        perm = np.random.default_rng(pseed).permutation(m)
+        got = fn(jnp.asarray(rows[perm]), jnp.asarray(labels[perm]), c)
+        _assert_bitwise(got, tree_cluster_mean_ref(rows[perm], labels[perm], c))
+
+
+def test_tree_cluster_mean_zero_arrival_cluster_degrades_to_zeros():
+    """A cluster whose members all carry zero weight yields exact zeros
+    (clamped denominator), in jit and oracle alike."""
+    rng = np.random.default_rng(33)
+    m, n, c = 8, 5, 2
+    rows = rng.standard_normal((m, n)).astype(np.float32)
+    labels = np.array([0, 0, 0, 0, 1, 1, 1, 1])
+    weights = np.array([1, 1, 1, 1, 0, 0, 0, 0], np.float32)
+    got = jax.jit(tree_cluster_mean_params, static_argnums=2)(
+        jnp.asarray(rows), jnp.asarray(labels), c, jnp.asarray(weights))
+    ref = tree_cluster_mean_ref(rows, labels, c, weights)
+    _assert_bitwise(got, ref)
+    np.testing.assert_array_equal(np.asarray(got)[4:], 0.0)
+
+
+def test_tree_sum_property_hypothesis():
+    """Property lane (skipped when hypothesis isn't installed): random
+    lengths / magnitudes / zero-weight patterns, jit vs oracle bitwise."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    jsum = jax.jit(tree_sum)
+    jmasked = jax.jit(masked_tree_sum)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 33), st.integers(0, 2**31 - 1))
+    def prop(m, seed):
+        rng = np.random.default_rng(seed)
+        x = (rng.standard_normal((m, 3)) * rng.choice(
+            [1e-20, 1e-3, 1.0, 1e6], size=(m, 3))).astype(np.float32)
+        w = rng.choice([0.0, 0.5, 1.0, 3.0], size=m).astype(np.float32)
+        _assert_bitwise(jsum(jnp.asarray(x)), tree_sum_ref(x))
+        _assert_bitwise(jmasked(jnp.asarray(x), jnp.asarray(w)),
+                        masked_tree_sum_ref(x, w))
+
+    prop()
+
+
+# --------------------------------------------------------------------------- #
+# cohort-sharded inputs: bit identity at shard counts 1/2/4/8
+# --------------------------------------------------------------------------- #
+
+def _sharded_case(shards: int):
+    """Tree reductions over a cohort block that arrives SHARDED over
+    ``shards`` devices and is replicated before reducing — the engine's
+    combine discipline (``repro.core.engine``) — returns np outputs.
+
+    The replicate step is load-bearing: reducing the still-sharded axis
+    lets GSPMD rewrite the tree levels into cross-device collectives whose
+    CPU codegen contracts differently than the single-device program
+    (observed ULP flips — the bug the engine's replicated combine fixes).
+    Replicated, every device runs the identical scalar program and the
+    bits match the numpy oracle at every shard count."""
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.sharding import cohort_shardings
+
+    rng = np.random.default_rng(5)
+    m, n, c = 16, 11, 3
+    rows = rng.standard_normal((m, n)).astype(np.float32)
+    labels = rng.integers(0, c, size=m)
+    weights = rng.uniform(0.0, 2.0, size=m).astype(np.float32)
+    weights[labels == 2] = 0.0           # a zero-arrival cluster
+    weights[m - m // 8:] = 0.0           # trailing dead slots (empty-shard
+    #                                      padding when shards divide m)
+    csh, rep = cohort_shardings(make_client_mesh(shards))
+
+    @jax.jit
+    def fn(r, w):
+        r = jax.lax.with_sharding_constraint(r, csh)    # arrives sharded
+        r = jax.lax.with_sharding_constraint(r, rep)    # combine: replicate
+        s = tree_sum(r)
+        ms = masked_tree_sum(r, w)
+        cm = tree_cluster_mean_params(r, jnp.asarray(labels), c, w)
+        return (jax.lax.with_sharding_constraint(s, rep),
+                jax.lax.with_sharding_constraint(ms, rep),
+                jax.lax.with_sharding_constraint(cm, rep))
+
+    outs = fn(jnp.asarray(rows), jnp.asarray(weights))
+    refs = (tree_sum_ref(rows), masked_tree_sum_ref(rows, weights),
+            tree_cluster_mean_ref(rows, labels, c, weights))
+    return [np.asarray(o) for o in outs], refs
+
+
+@mesh8
+@pytest.mark.parametrize("shards", [1, 2, 4, 8])
+def test_tree_reductions_bit_identical_under_cohort_sharding(shards):
+    outs, refs = _sharded_case(shards)
+    for got, ref in zip(outs, refs):
+        _assert_bitwise(got, ref)
+
+
+# --------------------------------------------------------------------------- #
+# single-device environments: self-forcing subprocess gate
+# --------------------------------------------------------------------------- #
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+from test_tree_reduction import _sharded_case, _bits
+for shards in (1, 2, 4, 8):
+    outs, refs = _sharded_case(shards)
+    for got, ref in zip(outs, refs):
+        assert np.array_equal(_bits(got), _bits(ref)), shards
+print("TREE_SHARDING_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(N_DEV >= 8, reason="covered in-process by the mesh tests")
+def test_tree_reductions_sharded_via_forced_devices_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.abspath(os.path.join(here, os.pardir, "src"))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here, env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "TREE_SHARDING_OK" in out.stdout
