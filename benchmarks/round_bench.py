@@ -65,6 +65,12 @@ from the `repro.obs` flight recorder, the same cross-driver replay gate
 the per-phase round breakdown and the trace-on vs trace-off steady delta
 are visible next to the bench numbers.
 
+``--checkpoint-interval N`` (default 10) adds the checkpoint-overhead lane
+(`repro.checkpoint`): the steady engine round with a full-state snapshot
+every N rounds vs without — amortised overhead (<10% budget at N=10),
+snapshot size, and isolated save/restore latency, recorded as the
+``"checkpoint"`` section with replay asserted bit-identical.
+
 Prints ``round,<name>,<us_per_round>,<derived>`` CSV like the other benches.
 """
 from __future__ import annotations
@@ -89,6 +95,7 @@ if __name__ == "__main__":
         from repro.launch.bootstrap import force_host_device_count
         force_host_device_count(_ns.mesh_shards)
 
+import jax
 import numpy as np
 
 from repro.sim import ClientPopulation, PopulationSpec, SimulatedFederation
@@ -100,7 +107,8 @@ WARMUP = 3            # rounds excluded from the steady-state mean (compiles)
 def _build(engine: bool, n_clients: int, sample_frac: float, rounds: int,
            eval_examples: int, mesh_shards: int = 1,
            strategy: str = "bfln", mode: str = "sync",
-           trace: bool = False) -> SimulatedFederation:
+           trace: bool = False, ckpt_interval: int = 0,
+           ckpt_dir: str = "checkpoints") -> SimulatedFederation:
     import repro.api as api
 
     # fresh population per driver: LatencyModel draws advance an internal rng,
@@ -121,6 +129,7 @@ def _build(engine: bool, n_clients: int, sample_frac: float, rounds: int,
         mesh=api.MeshSpec(shards=mesh_shards),
         obs=api.ObsSpec(enabled=True, trace_path="round_bench_trace.jsonl")
         if trace else api.ObsSpec(),
+        checkpoint=api.CheckpointSpec(interval=ckpt_interval, dir=ckpt_dir),
         engine=engine, seed=0)
     return SimulatedFederation(pop, spec)
 
@@ -371,6 +380,96 @@ def _sharded_sweep(n_clients: int, sample_frac: float, rounds: int,
             "replay_identical": True, "per_shards": rows}
 
 
+def _checkpoint_case(n_clients: int, sample_frac: float, rounds: int,
+                     eval_examples: int, interval: int) -> dict:
+    """Checkpoint-overhead lane: the steady engine round with snapshots every
+    ``interval`` rounds vs without, plus the snapshot's own save/restore
+    latency and on-disk size.  The amortised overhead at the default
+    interval=10 is the <10% acceptance headline; replay is asserted
+    bit-identical (checkpointing is a pure observer)."""
+    import shutil
+    import tempfile
+
+    # Each timed round blocks on its own device work (arena rows + deferred
+    # eval outputs).  The engine normally leaves those async so rounds
+    # pipeline — but a snapshot capture is a full sync point, so without
+    # per-round blocking the boundary round would be billed every OTHER
+    # round's deferred compute and the overhead number would be fiction.
+    def _settle(sim):
+        rec = sim.history[-1]
+        if not isinstance(rec.accuracy, float):
+            jax.block_until_ready(rec.accuracy)
+        jax.block_until_ready(sim.arena.data if sim.arena is not None
+                              else sim._params)
+
+    off = _build(True, n_clients, sample_frac, rounds, eval_examples)
+    times_off = []
+    for r in range(rounds):
+        t0 = time.perf_counter()
+        off.history.append(off._run_sync_round(r))
+        _settle(off)
+        times_off.append((time.perf_counter() - t0) * 1e3)
+    off._finalize_history()
+
+    tmp = tempfile.mkdtemp(prefix="round_bench_ckpt_")
+    try:
+        on = _build(True, n_clients, sample_frac, rounds, eval_examples,
+                    ckpt_interval=interval, ckpt_dir=tmp)
+        times_on = []
+        for r in range(rounds):
+            t0 = time.perf_counter()
+            on.history.append(on._run_sync_round(r))
+            on._maybe_checkpoint(r + 1)
+            _settle(on)
+            times_on.append((time.perf_counter() - t0) * 1e3)
+        # retire the last in-flight background write inside the accounting —
+        # the lane must charge every millisecond the writer blocked us for
+        t0 = time.perf_counter()
+        on._ckpt_wait()
+        times_on[-1] += (time.perf_counter() - t0) * 1e3
+        on._finalize_history()
+
+        assert ([b.block_hash() for b in on.trainer.chain.blocks]
+                == [b.block_hash() for b in off.trainer.chain.blocks]), \
+            "checkpointing perturbed the replay"
+        assert np.array_equal(on.trainer.ledger.balances,
+                              off.trainer.ledger.balances)
+
+        # isolated snapshot save/restore latency (outside the round timing)
+        from repro.checkpoint import load_latest, save_checkpoint
+        from repro.checkpoint.state import (
+            capture_experiment_state,
+            restore_experiment_state,
+        )
+        t0 = time.perf_counter()
+        tree = capture_experiment_state(on, rounds)
+        _, snap_bytes = save_checkpoint(tmp, rounds, tree)
+        save_ms = (time.perf_counter() - t0) * 1e3
+        fresh = _build(True, n_clients, sample_frac, rounds, eval_examples,
+                       ckpt_interval=interval, ckpt_dir=tmp)
+        t0 = time.perf_counter()
+        _, tree = load_latest(tmp)
+        restore_experiment_state(fresh, tree)
+        restore_ms = (time.perf_counter() - t0) * 1e3
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    steady_off = float(np.mean(times_off[WARMUP:] or times_off))
+    steady_on = float(np.mean(times_on[WARMUP:] or times_on))
+    return {
+        "interval": interval,
+        "rounds": rounds,
+        "steady_ms_off": round(steady_off, 3),
+        "steady_ms_on": round(steady_on, 3),
+        "overhead_pct": round(100.0 * (steady_on - steady_off) / steady_off,
+                              2),
+        "snapshot_bytes": int(snap_bytes),
+        "save_ms": round(save_ms, 2),
+        "restore_ms": round(restore_ms, 2),
+        "replay_identical": True,
+    }
+
+
 def _strategy_sweep(n_clients: int, sample_frac: float, rounds: int,
                     eval_examples: int) -> dict:
     """Steady-round engine latency for EVERY registered strategy — the
@@ -393,27 +492,34 @@ def _strategy_sweep(n_clients: int, sample_frac: float, rounds: int,
 def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
          out: str = "BENCH_round.json", heavy_eval: bool = True,
          mesh_shards: int = 8, strategy: str = "bfln", mode: str = "sync",
-         trace: bool = False, sweep_only: bool = False) -> dict:
+         trace: bool = False, sweep_only: bool = False,
+         checkpoint_interval: int = 10, checkpoint_only: bool = False) -> dict:
     cases = {}
     per_strategy = None
+    ckpt_case = None
     sweep_rounds = max(WARMUP + 2, rounds // 5)
     if mode in ("sync", "both") and not sweep_only:
-        cases["headline_eval256"] = _case(n_clients, sample_frac, rounds, 256,
-                                          mesh_shards, strategy)
-        if heavy_eval:
-            cases["heavy_eval1024"] = _case(n_clients, sample_frac, rounds,
-                                            1024, mesh_shards, strategy)
-        per_strategy = _strategy_sweep(n_clients, sample_frac, sweep_rounds,
-                                       256)
+        if not checkpoint_only:
+            cases["headline_eval256"] = _case(n_clients, sample_frac, rounds,
+                                              256, mesh_shards, strategy)
+            if heavy_eval:
+                cases["heavy_eval1024"] = _case(n_clients, sample_frac,
+                                                rounds, 1024, mesh_shards,
+                                                strategy)
+            per_strategy = _strategy_sweep(n_clients, sample_frac,
+                                           sweep_rounds, 256)
+        if checkpoint_interval > 0:
+            ckpt_case = _checkpoint_case(n_clients, sample_frac, rounds, 256,
+                                         checkpoint_interval)
 
     sharded_sweep = None
-    if mode in ("sync", "both") and mesh_shards > 1:
+    if mode in ("sync", "both") and mesh_shards > 1 and not checkpoint_only:
         widths = [s for s in (1, 2, 4, 8) if s <= mesh_shards]
         sharded_sweep = _sharded_sweep(n_clients, sample_frac, sweep_rounds,
                                        256, widths, strategy)
 
     async_case = None
-    if mode in ("async", "both") and not sweep_only:
+    if mode in ("async", "both") and not sweep_only and not checkpoint_only:
         flushes = max(WARMUP + 2, rounds // 2)
         async_case = _async_case(n_clients, sample_frac, flushes, 256,
                                  strategy)
@@ -427,18 +533,22 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
         "strategy": strategy,
         **({"per_strategy_steady_ms": per_strategy} if per_strategy else {}),
         **cases,
+        **({"checkpoint": ckpt_case} if ckpt_case else {}),
         **({"sharded_sweep": sharded_sweep} if sharded_sweep else {}),
         **({"async": async_case} if async_case else {}),
     }
-    if (mode == "async" or sweep_only) and os.path.exists(out):
-        # async-only / sweep-only runs merge into the existing results
-        # instead of clobbering them
+    if (mode == "async" or sweep_only or checkpoint_only) \
+            and os.path.exists(out):
+        # async-only / sweep-only / checkpoint-only runs merge into the
+        # existing results instead of clobbering them
         with open(out) as f:
             prev = json.load(f)
         if async_case is not None:
             prev["async"] = async_case
         if sweep_only and sharded_sweep is not None:
             prev["sharded_sweep"] = sharded_sweep
+        if checkpoint_only and ckpt_case is not None:
+            prev["checkpoint"] = ckpt_case
         result = prev
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -494,6 +604,18 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
         print(f"round,strategy_{name},{row['steady_ms'] * 1e3:.0f},"
               f"engine steady round (1 compile per entry) "
               f"first_ms={row['first_round_ms']}")
+    if ckpt_case is not None:
+        print(f"round,checkpoint,{ckpt_case['overhead_pct']:.2f},"
+              f"steady overhead pct at interval={ckpt_case['interval']} "
+              f"({ckpt_case['steady_ms_off']:.1f} -> "
+              f"{ckpt_case['steady_ms_on']:.1f} ms) "
+              f"snapshot_mb={ckpt_case['snapshot_bytes'] / 1e6:.1f} "
+              f"save_ms={ckpt_case['save_ms']} "
+              f"restore_ms={ckpt_case['restore_ms']} replay_identical")
+        if ckpt_case["overhead_pct"] >= 10:
+            print(f"round,WARNING,0,checkpoint overhead "
+                  f"{ckpt_case['overhead_pct']:.1f}% at interval="
+                  f"{ckpt_case['interval']} exceeds the 10% budget")
     if sharded_sweep is not None:
         for s, row in sharded_sweep["per_shards"].items():
             print(f"round,sweep_shards{s},{row['steady_ms'] * 1e3:.0f},"
@@ -510,11 +632,14 @@ def main(n_clients: int = 1000, sample_frac: float = 0.10, rounds: int = 50,
     elif async_case is not None:
         print(f"round,result,{async_case['steady_flush_speedup']:.2f},"
               f"-> {out}")
-    else:
+    elif sharded_sweep is not None:
         widest = max(sharded_sweep["per_shards"], key=int)
         print(f"round,result,"
               f"{sharded_sweep['per_shards'][widest]['speedup_vs_1']:.2f},"
               f"sweep speedup at {widest} shards -> {out}")
+    else:
+        print(f"round,result,{ckpt_case['overhead_pct']:.2f},"
+              f"checkpoint overhead pct -> {out}")
     return result
 
 
@@ -545,6 +670,14 @@ if __name__ == "__main__":
                    help="run ONLY the shard-count sweep (1/2/4/8 up to "
                         "--mesh-shards) and merge its sharded_sweep section "
                         "into an existing --out file")
+    p.add_argument("--checkpoint-interval", type=int, default=10,
+                   help="checkpoint-overhead lane: steady engine round with "
+                        "a full-state snapshot every N rounds vs without "
+                        "(<10%% amortised budget at the default 10; 0 skips "
+                        "the lane)")
+    p.add_argument("--checkpoint-only", action="store_true",
+                   help="run ONLY the checkpoint-overhead lane and merge its "
+                        "checkpoint section into an existing --out file")
     p.add_argument("--out", default="BENCH_round.json")
     args = p.parse_args()
     if args.sharded_only is not None:
@@ -559,4 +692,6 @@ if __name__ == "__main__":
     r = args.rounds or (10 if args.quick else 50)
     main(n_clients=n, rounds=r, out=args.out, heavy_eval=not args.quick,
          mesh_shards=args.mesh_shards, strategy=args.strategy,
-         mode=args.mode, trace=args.trace, sweep_only=args.sweep_only)
+         mode=args.mode, trace=args.trace, sweep_only=args.sweep_only,
+         checkpoint_interval=args.checkpoint_interval,
+         checkpoint_only=args.checkpoint_only)

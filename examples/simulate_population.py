@@ -28,6 +28,14 @@ Finishes in well under 2 minutes on CPU.  Scenario knobs:
   --trace t.jsonl [--chrome-trace t.json]   flight-recorder trace (repro.obs):
                                             per-phase spans + metrics, digest
                                             stamped into the manifest
+  --checkpoint-interval N --checkpoint-dir D   snapshot the complete state
+                                            every N rounds/flushes (keep-last
+                                            --keep-last); --resume continues
+                                            from D's newest readable snapshot
+                                            with bit-identical final digests
+  --crash-round R [--crash-phase P --crash-mode M]   fault injection: die at
+                                            boundary R (demo of the
+                                            kill-and-resume workflow)
 """
 import argparse
 import time
@@ -80,6 +88,13 @@ def build_spec(args) -> api.ExperimentSpec:
         obs=api.ObsSpec(enabled=True, trace_path=args.trace,
                         chrome_path=args.chrome_trace, console=True)
         if args.trace else api.ObsSpec(),
+        checkpoint=api.CheckpointSpec(interval=args.checkpoint_interval,
+                                      dir=args.checkpoint_dir,
+                                      keep_last=args.keep_last),
+        faults=api.FaultSpec(crash_round=args.crash_round,
+                             crash_phase=args.crash_phase,
+                             crash_mode=args.crash_mode)
+        if args.crash_round >= 0 else api.FaultSpec(),
         seed=args.seed)
 
 
@@ -124,6 +139,24 @@ def main():
                          "stamped into the manifest")
     ap.add_argument("--chrome-trace", default=None, metavar="PATH",
                     help="with --trace: also export a Chrome/Perfetto trace")
+    ap.add_argument("--checkpoint-interval", type=int, default=0,
+                    help="snapshot the complete experiment state every N "
+                         "rounds/flushes (0 = off)")
+    ap.add_argument("--checkpoint-dir", default="checkpoints",
+                    help="snapshot directory (with --checkpoint-interval)")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="keep-last-K snapshot pruning window")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="resume from a snapshot file or checkpoint dir "
+                         "(newest readable snapshot); the finished run's "
+                         "digests are bit-identical to an uninterrupted one")
+    ap.add_argument("--crash-round", type=int, default=-1,
+                    help="fault injection: crash at this round/flush "
+                         "boundary (-1 = never)")
+    ap.add_argument("--crash-phase", default="post_checkpoint",
+                    choices=["round_start", "pre_chain", "post_checkpoint"])
+    ap.add_argument("--crash-mode", default="sigkill",
+                    choices=["exception", "sigkill"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-async-demo", action="store_true")
     ap.add_argument("--spec-json", default=None, metavar="PATH",
@@ -151,7 +184,9 @@ def main():
           f"stragglers, strategy={spec.train.strategy}  "
           f"({time.time()-t0:.1f}s)")
 
-    res = api.run(spec, population=pop)
+    if args.resume:
+        print(f"resuming from {args.resume}")
+    res = api.run(spec, population=pop, resume_from=args.resume)
     print_history(res, spec.train.mode)
 
     print(f"\n{res.report.summary()}")

@@ -32,9 +32,11 @@ from repro.api.setup import (  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     AsyncSpec,
     ChainSpec,
+    CheckpointSpec,
     DataSpec,
     EvalSpec,
     ExperimentSpec,
+    FaultSpec,
     MeshSpec,
     ObsSpec,
     TrainSpec,

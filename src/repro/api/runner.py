@@ -75,6 +75,12 @@ def build_manifest(spec: ExperimentSpec, sim: SimulatedFederation,
     }
     if sim.engine is not None:
         manifest["engine_compile_counts"] = sim.engine.cache_sizes()
+    if sim.ckpt is not None:
+        manifest["checkpoints_written"] = sim._ckpt_written
+        manifest["checkpoint_bytes"] = sim._ckpt_bytes
+    if sim._resumed_from is not None:
+        manifest["resumed_from"] = sim._resumed_from[0]
+        manifest["resume_step"] = sim._resumed_from[1]
     return manifest
 
 
@@ -83,7 +89,7 @@ def format_manifest(manifest: dict[str, Any]) -> str:
 
 
 def run(spec: ExperimentSpec, population: ClientPopulation | None = None,
-        ) -> ExperimentResult:
+        resume_from: str | None = None) -> ExperimentResult:
     """Run one experiment end to end.
 
     ``population`` may be passed explicitly to reuse an already-materialised
@@ -92,6 +98,15 @@ def run(spec: ExperimentSpec, population: ClientPopulation | None = None,
     A supplied population must match the spec — the manifest stamps the
     spec's ``config_digest`` as the replay recipe, which only holds if the
     population is the one ``spec.data``/``spec.seed`` would rebuild.
+
+    ``resume_from`` restores a snapshot written by ``spec.checkpoint`` (a
+    file path, or a checkpoint directory whose newest readable snapshot is
+    used) and continues the run from that boundary.  The snapshot's stamped
+    ``resume_digest`` must match the spec's — obs/checkpoint/faults sections
+    are free to differ (so a crashed run can be resumed with its fault
+    schedule cleared), everything else must be the same experiment.  A
+    resumed run finishes with manifest digests bit-identical to the
+    uninterrupted run's.
     """
     if population is None:
         population = ClientPopulation.from_spec(spec.population_spec())
@@ -106,9 +121,9 @@ def run(spec: ExperimentSpec, population: ClientPopulation | None = None,
     if profile_dir is not None:
         import jax
         with jax.profiler.trace(profile_dir):
-            report = sim.run()
+            report = sim.run(resume_from=resume_from)
     else:
-        report = sim.run()
+        report = sim.run(resume_from=resume_from)
     manifest = build_manifest(spec, sim, report)
     if sim.obs.enabled:
         _emit_trace(spec, sim, manifest)

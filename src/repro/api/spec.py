@@ -3,15 +3,17 @@
 The public experiment surface used to be three disjoint entry points: the
 legacy ``FederatedTrainer`` (hand-wired bundle/optimizer/data), the flat
 22-field ``SimConfig`` (BFLN hardcoded), and per-example wiring.  The spec
-nests the flat knobs into seven sub-configs —
+nests the flat knobs into nine sub-configs —
 
-    data    population: shards, behaviour profiles, latency (→ PopulationSpec)
-    train   the round loop: strategy, rounds, sampling, model width, lr
-    async_  FedBuff buffered aggregation (mode="async" only)
-    eval    metric cadence and sub-sampling
-    chain   blockchain incentives: reward pool, rho, initial stake
-    mesh    client-axis device mesh for the sharded arena
-    obs     flight recorder: span tracing + metrics sinks (→ repro.obs)
+    data        population: shards, behaviour profiles, latency (→ PopulationSpec)
+    train       the round loop: strategy, rounds, sampling, model width, lr
+    async_      FedBuff buffered aggregation (mode="async" only)
+    eval        metric cadence and sub-sampling
+    chain       blockchain incentives: reward pool, rho, initial stake
+    mesh        client-axis device mesh for the sharded arena
+    obs         flight recorder: span tracing + metrics sinks (→ repro.obs)
+    checkpoint  crash-consistent snapshot/resume (→ repro.checkpoint)
+    faults      seeded fault-injection schedule (→ repro.faults)
 
 — and is the input to :func:`repro.api.run`.  Every spec round-trips through
 JSON (``from_json(to_json(spec)) == spec``) and hashes to a stable
@@ -32,6 +34,8 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Mapping
 
+from repro.checkpoint.spec import CheckpointSpec
+from repro.faults.spec import FaultSpec
 from repro.obs.spec import ObsSpec
 
 
@@ -200,7 +204,12 @@ class MeshSpec:
 
 _SUB_SPECS = {"data": DataSpec, "train": TrainSpec, "async_": AsyncSpec,
               "eval": EvalSpec, "chain": ChainSpec, "mesh": MeshSpec,
-              "obs": ObsSpec}
+              "obs": ObsSpec, "checkpoint": CheckpointSpec,
+              "faults": FaultSpec}
+
+#: FaultSpec round-list fields normalised list -> tuple on JSON load.
+_FAULT_TUPLE_FIELDS = ("producer_fail_rounds", "bad_block_rounds",
+                       "drop_commit_rounds", "delay_commit_rounds")
 
 
 @dataclass(frozen=True)
@@ -213,6 +222,9 @@ class ExperimentSpec:
     chain: ChainSpec = field(default_factory=ChainSpec)
     mesh: MeshSpec = field(default_factory=MeshSpec)
     obs: ObsSpec = field(default_factory=ObsSpec)   # flight recorder (off)
+    checkpoint: CheckpointSpec = field(         # snapshot/resume (off)
+        default_factory=CheckpointSpec)
+    faults: FaultSpec = field(default_factory=FaultSpec)  # injection (off)
     engine: bool = True               # arena-backed fused round engine
     seed: int = 0
 
@@ -267,6 +279,8 @@ class ExperimentSpec:
         d["train"]["hidden"] = list(self.train.hidden)
         d["train"]["strategy_params"] = dict(self.train.strategy_params)
         d["mesh"]["xla_flags"] = list(self.mesh.xla_flags)
+        for f in _FAULT_TUPLE_FIELDS:
+            d["faults"][f] = list(getattr(self.faults, f))
         return d
 
     def to_json(self, indent: int | None = None) -> str:
@@ -291,6 +305,10 @@ class ExperimentSpec:
                 sub["hidden"] = tuple(sub["hidden"])
             if name == "mesh" and "xla_flags" in sub:
                 sub["xla_flags"] = tuple(sub["xla_flags"])
+            if name == "faults":
+                for f in _FAULT_TUPLE_FIELDS:
+                    if f in sub:
+                        sub[f] = tuple(sub[f])
             kw[name] = sub_cls(**sub)
         for name in ("engine", "seed"):
             if name in d:
@@ -305,12 +323,28 @@ class ExperimentSpec:
         """Stable SHA-256 over the canonical JSON form — the reproducibility
         stamp every run manifest carries.
 
-        The ``obs`` section is excluded: observability is out-of-band by
-        contract (it times and counts, never perturbs — the invariance tests
-        pin bit-identical replay with tracing on and off), so a traced run
-        and its untraced twin share the same replay recipe.
+        The ``obs`` and ``checkpoint`` sections are excluded: both are
+        out-of-band by contract — observability times and counts but never
+        perturbs, and checkpointing snapshots state without changing the
+        trajectory (the resume tests pin bit-identical manifests with
+        checkpointing on, off, and resumed-from) — so such runs all share
+        the same replay recipe.  ``faults`` IS included: an injected fault
+        schedule perturbs the run it describes.
         """
         d = self.to_dict()
         d.pop("obs", None)
+        d.pop("checkpoint", None)
+        return hashlib.sha256(
+            json.dumps(d, sort_keys=True).encode()).hexdigest()
+
+    def resume_digest(self) -> str:
+        """The experiment identity a checkpoint binds to: like
+        ``config_digest`` but ALSO excluding ``faults``, so a crashed run can
+        be resumed with its fault schedule cleared (a ``round_start`` crash
+        fault would otherwise re-fire on every resume, forever) while any
+        change to the underlying experiment is still rejected at restore."""
+        d = self.to_dict()
+        for section in ("obs", "checkpoint", "faults"):
+            d.pop(section, None)
         return hashlib.sha256(
             json.dumps(d, sort_keys=True).encode()).hexdigest()

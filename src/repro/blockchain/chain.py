@@ -129,6 +129,7 @@ class Block:
 @dataclass
 class Blockchain:
     blocks: list[Block] = field(default_factory=list)
+    quarantined: list[Block] = field(default_factory=list)  # rejected blocks
 
     def __post_init__(self):
         if not self.blocks:
@@ -140,10 +141,38 @@ class Blockchain:
     def head(self) -> Block:
         return self.blocks[-1]
 
-    def pack_block(self, round_idx: int, producer: int, pool: TxPool) -> Block:
-        """Producer drains the tx pool into a new block (DPoS slot)."""
+    def block_ok(self, block: Block) -> bool:
+        """Structural admission check for a candidate head block: correct
+        hash link to the current head and a merkle root that matches its own
+        transactions.  This is what :meth:`validate` enforces per link —
+        running it at admission time lets a malformed or digest-mismatched
+        block be quarantined instead of poisoning the chain."""
+        return (block.prev_hash == self.head.block_hash()
+                and block.merkle_root == _merkle_root(
+                    [t.tx_hash() for t in block.transactions]))
+
+    def pack_block(self, round_idx: int, producer: int, pool: TxPool,
+                   faults=None) -> Block:
+        """Producer drains the tx pool into a new block (DPoS slot).
+
+        ``faults`` (`repro.faults`) may inject a digest-mismatched candidate
+        first; the admission check rejects it into ``quarantined`` and the
+        round continues with an honestly re-packed block — the
+        quarantine-and-continue degradation path."""
         with self.obs.span("chain.pack", cat="chain", round=round_idx) as sp:
             txs = tuple(pool.drain())
+            if faults is not None and faults.bad_block(round_idx):
+                bad = Block(
+                    index=len(self.blocks), round_idx=round_idx,
+                    producer=producer, prev_hash=self.head.block_hash(),
+                    merkle_root=hashlib.sha256(
+                        b"corrupt:" + str(round_idx).encode()).hexdigest(),
+                    transactions=txs)
+                assert not self.block_ok(bad)
+                self.quarantined.append(bad)
+                self.obs.event("fault.block_quarantined", round=round_idx,
+                               block_hash=bad.block_hash())
+                self.obs.inc("fault.block_quarantined")
             block = Block(
                 index=len(self.blocks),
                 round_idx=round_idx,
@@ -213,6 +242,12 @@ class Blockchain:
         legacy: set[str] = set()
         for tx in block.transactions:
             if tx.kind == "model_hash":
+                if tx.round_idx != block.round_idx:
+                    # a commit delivered late (e.g. a delayed-delivery fault)
+                    # lands in a later round's block: it is recorded there
+                    # but carries no verification weight — commitments bind
+                    # to the round they were made for
+                    continue
                 # FIRST commit wins — the digest the producer actually saw
                 # and aggregated.  Last-wins let a client re-submit after the
                 # producer recorded it and be judged against the wrong digest

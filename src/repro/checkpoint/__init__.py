@@ -1,1 +1,16 @@
-from repro.checkpoint.io import load_pytree, restore_trainer_state, save_pytree, save_trainer_state  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    CheckpointError,
+    checkpoint_path,
+    list_checkpoints,
+    load_latest,
+    load_pytree,
+    restore_trainer_state,
+    save_checkpoint,
+    save_pytree,
+    save_trainer_state,
+)
+from repro.checkpoint.spec import CheckpointSpec  # noqa: F401
+from repro.checkpoint.state import (  # noqa: F401
+    capture_experiment_state,
+    restore_experiment_state,
+)

@@ -1,0 +1,153 @@
+"""Capture/restore of the COMPLETE experiment state at a round boundary.
+
+A snapshot is everything a resumed process needs to continue a run such
+that the final manifest digests (event-log sha256, block hashes, balances,
+final accuracy) are bit-identical to the uninterrupted run:
+
+* the parameter state — the (gathered-to-host) arena matrix in engine mode,
+  or the stacked param pytree in legacy-oracle mode,
+* the blockchain (blocks + quarantined), the tx pool, the token ledger,
+  and the CACC packing queue,
+* the discrete-event machinery — virtual clock, the event queue's heap
+  *as-is* (restoring the raw heap list preserves pop order exactly) and
+  its insertion counter, the event log, and the round history,
+* both numpy RNG streams (the driver's and the latency model's — the
+  latency model owns a separate generator consumed per draw) plus the
+  fault injector's stream,
+* async mode: the FedBuff view — model version, global state, version
+  snapshots, in-flight dispatch map, and the staleness buffer.
+
+Arrays travel through the hardened npz channel of :mod:`repro.checkpoint.io`
+(exact bytes, bfloat16-safe); host objects travel as one pickled blob
+stored as a uint8 leaf.  Every snapshot stamps the spec's
+``resume_digest()`` — the experiment identity *excluding* obs/checkpoint/
+faults — so a run can be resumed with its fault schedule cleared or its
+checkpoint cadence changed, but never silently resumed into a different
+experiment.
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import CheckpointError
+
+CAPTURE_VERSION = 1
+
+
+def capture_experiment_state(sim, next_round: int,
+                             async_view: dict | None = None) -> dict:
+    """Snapshot ``sim`` (a ``repro.sim.SimulatedFederation``) at a boundary
+    where ``next_round`` rounds/flushes have completed.  Returns the pytree
+    handed to :func:`repro.checkpoint.io.save_checkpoint`."""
+    # deferred device accuracies materialise now instead of at end of run —
+    # same values, so the trajectory is unperturbed
+    sim._finalize_history()
+    trainer = sim.trainer
+    host: dict[str, Any] = {
+        "version": CAPTURE_VERSION,
+        "resume_digest": sim.spec.resume_digest(),
+        "mode": sim.cfg.mode,
+        "next_round": int(next_round),
+        "clock": sim.clock.now,
+        "queue_heap": list(sim.queue._heap),
+        "queue_seq": sim.queue._seq,
+        "event_log": list(sim.event_log),
+        "history": list(sim.history),
+        "last_labels": sim.last_labels.copy(),
+        "rng": sim.rng.bit_generator.state,
+        "latency_rng": sim.pop.latency.rng.bit_generator.state,
+        "chain_blocks": list(trainer.chain.blocks),
+        "chain_quarantined": list(trainer.chain.quarantined),
+        "pool_pending": list(trainer.pool.pending),
+        "ledger_balances": trainer.ledger.balances.copy(),
+        "ledger_minted": trainer.ledger.minted,
+        "packing_queue": list(trainer._queue),
+        "faults": sim.faults.state_dict(),
+    }
+    if async_view is not None:
+        # at a flush boundary every buffered update is still delta-less
+        # (deltas are materialised lazily inside the flush), so (client,
+        # version) pairs reconstruct the buffer exactly
+        host["async"] = {
+            "version": int(async_view["version"]),
+            "global_state": jax.device_get(async_view["global_state"]),
+            "snapshots": {int(v): jax.device_get(s)
+                          for v, s in async_view["snapshots"].items()},
+            "inflight": dict(async_view["inflight"]),
+            "buffer": [(int(u.client), int(u.version))
+                       for u in async_view["agg"].buffer],
+        }
+    arrays: dict[str, Any] = {}
+    if sim.arena is not None:
+        arrays["arena"] = np.asarray(
+            jax.device_get(sim.arena.data[: sim.arena.n_clients]))
+    else:
+        arrays["params"] = jax.device_get(sim._params)
+    return {"arrays": arrays,
+            "host": np.frombuffer(pickle.dumps(host), np.uint8)}
+
+
+def restore_experiment_state(sim, tree: dict) -> tuple[int, dict | None]:
+    """Restore a freshly-constructed ``sim`` (same spec, same population)
+    from a snapshot tree.  Returns ``(next_round, async_view)`` where
+    ``async_view`` (async mode only) re-seeds ``_run_async``'s loop state."""
+    try:
+        host = pickle.loads(np.asarray(tree["host"]).tobytes())
+    except Exception as e:
+        raise CheckpointError(f"snapshot host blob does not decode: {e}") from e
+    if host.get("version") != CAPTURE_VERSION:
+        raise CheckpointError(
+            f"snapshot capture version {host.get('version')} != "
+            f"{CAPTURE_VERSION}")
+    want = sim.spec.resume_digest()
+    if host["resume_digest"] != want:
+        raise CheckpointError(
+            "snapshot belongs to a different experiment: resume_digest "
+            f"{host['resume_digest'][:12]} != spec's {want[:12]} (obs/"
+            "checkpoint/faults sections are free to differ; everything else "
+            "must match)")
+
+    arrays = tree["arrays"]
+    if sim.arena is not None:
+        sim.arena.rebind(jnp.asarray(np.asarray(arrays["arena"])))
+    else:
+        sim._params = jax.tree.map(jnp.asarray, arrays["params"])
+
+    sim.clock._now = float(host["clock"])
+    sim.queue._heap = list(host["queue_heap"])
+    sim.queue._seq = int(host["queue_seq"])
+    sim.event_log[:] = host["event_log"]
+    sim.history[:] = host["history"]
+    sim.last_labels[:] = host["last_labels"]
+    sim.rng.bit_generator.state = host["rng"]
+    sim.pop.latency.rng.bit_generator.state = host["latency_rng"]
+
+    chain = sim.trainer.chain
+    chain.blocks[:] = host["chain_blocks"]
+    chain.quarantined[:] = host["chain_quarantined"]
+    sim.trainer.pool.pending[:] = host["pool_pending"]
+    ledger = sim.trainer.ledger
+    ledger.balances = np.asarray(host["ledger_balances"], np.float64)
+    ledger.minted = float(host["ledger_minted"])
+    sim.trainer._queue[:] = host["packing_queue"]
+    sim.faults.load_state(host.get("faults"))
+
+    av = host.get("async")
+    if av is not None:
+        from repro.sim.async_agg import BufferedAggregator, BufferedUpdate
+        agg = BufferedAggregator(sim.cfg.buffer_size, sim.cfg.staleness_alpha)
+        agg.buffer = [BufferedUpdate(c, None, v) for c, v in av["buffer"]]
+        av = {
+            "version": av["version"],
+            "global_state": jax.tree.map(jnp.asarray, av["global_state"]),
+            "snapshots": {v: jax.tree.map(jnp.asarray, s)
+                          for v, s in av["snapshots"].items()},
+            "inflight": dict(av["inflight"]),
+            "agg": agg,
+        }
+    return int(host["next_round"]), av

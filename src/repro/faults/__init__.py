@@ -1,0 +1,7 @@
+from repro.faults.injector import (  # noqa: F401
+    NULL_INJECTOR,
+    FaultInjector,
+    InjectedCrash,
+    NullInjector,
+)
+from repro.faults.spec import CRASH_MODES, CRASH_PHASES, FaultSpec  # noqa: F401

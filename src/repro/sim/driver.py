@@ -51,6 +51,7 @@ mismatch.
 from __future__ import annotations
 
 import functools
+import os
 import warnings
 from dataclasses import dataclass, field
 from typing import Any
@@ -63,6 +64,7 @@ from repro.blockchain import TokenLedger
 from repro.core import FederatedTrainer, ModelBundle, digest_of
 from repro.core.engine import RoundEngine
 from repro.core.fl import global_evaluate, local_train
+from repro.faults import NULL_INJECTOR, FaultInjector
 from repro.models import classifier as clf
 from repro.obs import NULL_RECORDER, FlightRecorder
 from repro.optim import adam
@@ -299,6 +301,24 @@ class SimulatedFederation:
         else:
             self.obs = NULL_RECORDER
 
+        # checkpoint/resume + fault injection (repro.checkpoint/repro.faults):
+        # both default off and follow the recorder's no-op-object pattern, so
+        # the default hot path is bit-identical to a build without them
+        ckpt_spec = getattr(self.spec, "checkpoint", None)
+        self.ckpt = ckpt_spec if (ckpt_spec is not None
+                                  and ckpt_spec.enabled) else None
+        fault_spec = getattr(self.spec, "faults", None)
+        if fault_spec is not None and fault_spec.enabled:
+            self.faults = FaultInjector(fault_spec, obs=self.obs)
+        else:
+            self.faults = NULL_INJECTOR
+        self._resume_async: dict | None = None
+        self._resumed_from: tuple[str, int] | None = None
+        self._ckpt_written = 0
+        self._ckpt_bytes = 0
+        self._ckpt_executor = None     # lazy single-worker snapshot writer
+        self._ckpt_future = None       # at most one write in flight
+
         strategy = strat
         opt = self.opt
         n_clusters = config.n_clusters
@@ -345,6 +365,7 @@ class SimulatedFederation:
                     traffic = 2 * k * n_params * 4
                 self.obs.set_gauge("engine.cohort_bytes", traffic)
         self.trainer.attach_obs(self.obs)
+        self.trainer.attach_faults(self.faults)
 
         # ------- legacy (pre-arena) jitted programs, kept as the oracle ---- #
 
@@ -418,6 +439,29 @@ class SimulatedFederation:
                 for slot, gid in enumerate(cohort)
                 if arrived[slot] and self.pop.byzantine[gid]}
 
+    def _schedule_retries(self, r: int, gid: int, t_fail: float,
+                          lat: float) -> None:
+        """Bounded retry-with-backoff for a dropped cohort slot
+        (``FaultSpec.retry``).  Every redraw comes from the injector's own
+        seeded generator — the simulator's streams are untouched, so the
+        retry knob perturbs nothing else and replays/resumes exactly.  A
+        recovered client may still miss the deadline: retry is bounded, not
+        a delivery guarantee."""
+        faults, obs = self.faults, self.obs
+        t_retry = t_fail
+        for attempt in range(1, faults.spec.retry_max + 1):
+            with obs.span("round.retry", round=r, client=gid,
+                          attempt=attempt) as sp:
+                t_retry += faults.retry_latency(lat, attempt)
+                ok = faults.retry_succeeds(self.pop.dropout[gid])
+                sp.set(t_retry=t_retry, recovered=ok)
+            obs.inc("fault.retry")
+            if ok:
+                self.queue.push(t_retry, ev.UPDATE_READY, gid, r)
+                obs.inc("fault.retry_recovered")
+                return
+            self.queue.push(t_retry, ev.DROPOUT, gid, r)
+
     def _eval_slices(self) -> tuple[jnp.ndarray, jnp.ndarray]:
         return (self.pop.test_x[: self.cfg.eval_examples],
                 self.pop.test_y[: self.cfg.eval_examples])
@@ -440,6 +484,7 @@ class SimulatedFederation:
 
     def _sync_round_body(self, r: int, rt) -> SimRoundRecord:
         cfg, pop, rng, obs = self.cfg, self.pop, self.rng, self.obs
+        self.faults.maybe_crash(r, "round_start")
         t0 = self.clock.now
         k = max(1, int(round(cfg.sample_frac * pop.n_clients)))
 
@@ -456,8 +501,10 @@ class SimulatedFederation:
             lat = pop.latency.draw(gid)
             if rng.random() < pop.dropout[gid]:
                 dropouts.add(gid)
-                self.queue.push(t0 + lat * rng.uniform(0.1, 0.9),
-                                ev.DROPOUT, gid, r)
+                t_fail = t0 + lat * rng.uniform(0.1, 0.9)
+                self.queue.push(t_fail, ev.DROPOUT, gid, r)
+                if self.faults.retry:
+                    self._schedule_retries(r, gid, t_fail, lat)
             else:
                 self.queue.push(t0 + lat, ev.UPDATE_READY, gid, r)
 
@@ -480,12 +527,15 @@ class SimulatedFederation:
             sp.set(n_events=n_events)
 
         arrived = np.array([int(g) in arrived_set for g in cohort], dtype=bool)
-        n_strag = int(len(cohort) - arrived.sum() - len(dropouts))
+        # with FaultSpec.retry a dropout may recover and still arrive;
+        # count only the deaths that stuck (faults off: identical to before)
+        n_drop = sum(1 for g in dropouts if g not in arrived_set)
+        n_strag = int(len(cohort) - arrived.sum() - n_drop)
         rt.set(arrived=int(arrived.sum()))
 
         record = SimRoundRecord(
             round_idx=r, t_open=t0, t_close=self.clock.now, cohort=cohort,
-            arrived=arrived, n_stragglers=n_strag, n_dropouts=len(dropouts),
+            arrived=arrived, n_stragglers=n_strag, n_dropouts=n_drop,
             n_byzantine=int(pop.byzantine[cohort][arrived].sum()),
             producer=-1, verified_frac=0.0, reward_paid=0.0,
             reward_burned=0.0, mean_loss=float("nan"))
@@ -513,6 +563,7 @@ class SimulatedFederation:
             labels_dev, mean_loss = out.labels, out.mean_loss
             with obs.span("round.digests", round=r):
                 digests = self.engine.format_digests(out.residues)
+            self.faults.maybe_crash(r, "pre_chain")
             with obs.span("round.chain", round=r):
                 cres = self.trainer.chain_round(
                     r, None, labels_dev, out.corr, cohort=cohort,
@@ -526,6 +577,7 @@ class SimulatedFederation:
                     cohort_params, cx, cy, arrived_w)
                 obs.ready(mean_loss)
             labels_dev = agg.labels
+            self.faults.maybe_crash(r, "pre_chain")
             with obs.span("round.chain", round=r):
                 cres = self.trainer.chain_round(
                     r, local_params, agg.labels, agg.corr, cohort=cohort,
@@ -591,14 +643,26 @@ class SimulatedFederation:
                 f"buffer_size ({cfg.buffer_size}) + concurrency "
                 f"({cfg.concurrency}) exceeds the population "
                 f"({pop.n_clients}); the buffer could never fill")
-        version = 0
-        if self.arena is not None:
-            global_state = self.arena.data[0]          # (N,) flat row
+        resume = self._resume_async
+        self._resume_async = None
+        if resume is not None:
+            # loop state restored from a flush-boundary snapshot
+            # (`repro.checkpoint.state`): the post-flush dispatch already
+            # happened before the snapshot, so the loop re-enters directly
+            version = resume["version"]
+            global_state = resume["global_state"]
+            snapshots: dict[int, Any] = resume["snapshots"]
+            inflight: dict[int, int] = resume["inflight"]
+            agg = resume["agg"]
         else:
-            global_state = tree_index(self._params, 0)
-        snapshots: dict[int, Any] = {0: global_state}
-        inflight: dict[int, int] = {}          # client -> dispatch version
-        agg = BufferedAggregator(cfg.buffer_size, cfg.staleness_alpha)
+            version = 0
+            if self.arena is not None:
+                global_state = self.arena.data[0]      # (N,) flat row
+            else:
+                global_state = tree_index(self._params, 0)
+            snapshots = {0: global_state}
+            inflight = {}                  # client -> dispatch version
+            agg = BufferedAggregator(cfg.buffer_size, cfg.staleness_alpha)
 
         def dispatch() -> None:
             want = cfg.concurrency - len(inflight)
@@ -626,7 +690,8 @@ class SimulatedFederation:
                     self.queue.push(t + lat, ev.UPDATE_READY, gid, version,
                                     tag=version)
 
-        dispatch()
+        if resume is None:
+            dispatch()
         while version < cfg.rounds and self.queue:
             e = self.queue.pop()
             self.clock.advance_to(e.time)
@@ -641,7 +706,8 @@ class SimulatedFederation:
             if dispatched_v is None:
                 continue
             agg.add(BufferedUpdate(e.client, None, dispatched_v))
-            if len(agg) >= cfg.buffer_size:
+            flushed = len(agg) >= cfg.buffer_size
+            if flushed:
                 version, global_state = self._async_flush(
                     agg, version, global_state, snapshots)
                 snapshots[version] = global_state
@@ -649,6 +715,16 @@ class SimulatedFederation:
                 for v in [v for v in snapshots if v not in live]:
                     del snapshots[v]
             dispatch()
+            if flushed:
+                # flush boundary: snapshot AFTER the post-flush dispatch so
+                # a resume re-enters the loop with nothing left to re-issue
+                self._maybe_checkpoint(version, async_view={
+                    "version": version, "global_state": global_state,
+                    "snapshots": snapshots, "inflight": inflight,
+                    "agg": agg})
+                if self.faults.will_crash(version, "post_checkpoint"):
+                    self._ckpt_wait()      # snapshot durable before dying
+                self.faults.maybe_crash(version, "post_checkpoint")
 
         if version < cfg.rounds:
             # event queue drained early (e.g. availability collapse) — the
@@ -674,6 +750,7 @@ class SimulatedFederation:
     def _async_flush_body(self, agg: BufferedAggregator, version: int,
                           global_state, snapshots: dict) -> tuple:
         cfg, pop, obs = self.cfg, self.pop, self.obs
+        self.faults.maybe_crash(version, "round_start")
         clients = np.array([u.client for u in agg.buffer], dtype=np.int64)
         versions = [u.version for u in agg.buffer]
         k = len(clients)
@@ -698,6 +775,7 @@ class SimulatedFederation:
                 obs.ready(local_rows)
             if obs.enabled:
                 obs.compile_delta(self.engine.cache_sizes(), version)
+            self.faults.maybe_crash(version, "pre_chain")
             with obs.span("flush.chain", cat="flush", round=version):
                 cres = self.trainer.chain_round(
                     version, None, labels, corr, cohort=clients,
@@ -731,6 +809,7 @@ class SimulatedFederation:
             # call)
             agg.buffer = [BufferedUpdate(int(c), tree_index(deltas, i), v)
                           for i, (c, v) in enumerate(zip(clients, versions))]
+            self.faults.maybe_crash(version, "pre_chain")
             with obs.span("flush.chain", cat="flush", round=version):
                 cres = self.trainer.chain_round(
                     version, local_params, labels, corr, cohort=clients,
@@ -798,15 +877,94 @@ class SimulatedFederation:
             if rec.cluster_accuracy is not None:
                 rec.cluster_accuracy = np.asarray(rec.cluster_accuracy)
 
-    def run(self) -> SimReport:
+    def _maybe_checkpoint(self, boundary: int,
+                          async_view: dict | None = None) -> None:
+        """Snapshot the complete experiment state when ``boundary``
+        (completed rounds/flushes) hits the checkpoint interval.
+
+        Only the *capture* (a consistent host copy of all state) runs on the
+        round hot path; the expensive half — npz encode, sha256, write,
+        fsync — is handed to a single background writer thread so the next
+        round overlaps the disk work (the <10% steady-overhead budget,
+        `benchmarks/round_bench.py --checkpoint-interval`).  At most one
+        write is in flight: a new boundary first retires the previous one.
+        Crash consistency is unaffected — the writer stages to a temp file
+        and atomically renames, so a death mid-write leaves the previous
+        snapshot intact — and a scheduled ``post_checkpoint`` crash flushes
+        the writer first (see :meth:`run`), keeping the kill-and-resume
+        contract exact.  The fault injector corrupts the file (if scheduled)
+        only after its write completes."""
+        ck = self.ckpt
+        if ck is None or boundary == 0 or boundary % ck.interval:
+            return
+        from repro.checkpoint import save_checkpoint
+        from repro.checkpoint.state import capture_experiment_state
+        with self.obs.span("ckpt.save", cat="ckpt", round=boundary) as sp:
+            tree = capture_experiment_state(self, boundary, async_view)
+            self._ckpt_wait()          # retire the previous in-flight write
+            if self._ckpt_executor is None:
+                from concurrent.futures import ThreadPoolExecutor
+                self._ckpt_executor = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="ckpt-writer")
+            faults = self.faults
+
+            def _write() -> int:
+                path, n_bytes = save_checkpoint(ck.dir, boundary, tree,
+                                                keep_last=ck.keep_last)
+                faults.corrupt_checkpoint(path, boundary)
+                return n_bytes
+            self._ckpt_future = self._ckpt_executor.submit(_write)
+            sp.set(boundary=boundary)
+
+    def _ckpt_wait(self) -> None:
+        """Block until the in-flight snapshot write (if any) is durable,
+        then account for it (``ckpt.saved`` counter, ``ckpt.bytes`` gauge).
+        Re-raises a failed write's exception on the main thread."""
+        fut, self._ckpt_future = self._ckpt_future, None
+        if fut is None:
+            return
+        n_bytes = fut.result()
+        self.obs.inc("ckpt.saved")
+        self.obs.set_gauge("ckpt.bytes", n_bytes)
+        self._ckpt_written += 1
+        self._ckpt_bytes = n_bytes
+
+    def _restore(self, resume_from: str) -> int:
+        """Restore from ``resume_from`` (a snapshot file, or a checkpoint
+        directory whose newest *readable* snapshot is used).  Returns the
+        next round/flush index to execute."""
+        from repro.checkpoint import load_latest, load_pytree
+        from repro.checkpoint.state import restore_experiment_state
+        with self.obs.span("ckpt.restore", cat="ckpt") as sp:
+            if os.path.isdir(resume_from):
+                _, tree = load_latest(resume_from)
+            else:
+                tree = load_pytree(resume_from)
+            next_round, async_view = restore_experiment_state(self, tree)
+            sp.set(step=next_round)
+        self.obs.inc("ckpt.restored")
+        self._resume_async = async_view
+        self._resumed_from = (resume_from, next_round)
+        return next_round
+
+    def run(self, resume_from: str | None = None) -> SimReport:
         cfg = self.cfg
+        start = self._restore(resume_from) if resume_from is not None else 0
         if cfg.mode == "sync":
-            for r in range(cfg.rounds):
+            for r in range(start, cfg.rounds):
                 self.history.append(self._run_sync_round(r))
+                self._maybe_checkpoint(r + 1)
+                if self.faults.will_crash(r + 1, "post_checkpoint"):
+                    self._ckpt_wait()      # snapshot durable before dying
+                self.faults.maybe_crash(r + 1, "post_checkpoint")
         elif cfg.mode == "async":
             self._run_async()
         else:
             raise ValueError(f"unknown mode {cfg.mode!r}")
+        self._ckpt_wait()                  # retire any in-flight snapshot
+        if self._ckpt_executor is not None:
+            self._ckpt_executor.shutdown(wait=True)
+            self._ckpt_executor = None
         self._finalize_history()
 
         n_eval = min(cfg.eval_clients, self.pop.n_clients)

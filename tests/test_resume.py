@@ -1,0 +1,229 @@
+"""Crash-consistent checkpoint/resume — the tentpole contract.
+
+Kill a run at a checkpoint boundary (in-process ``InjectedCrash`` for the
+matrix, a real SIGKILL subprocess for the slow case), resume from the
+snapshot directory with the fault schedule cleared, and the final manifest
+digests (event-log sha256, block-hashes digest, balances digest, final
+accuracy) must be BIT-identical to the uninterrupted run — for sync and
+async, engine and legacy-oracle, mesh_shards 1 and 8.  Checkpointing itself
+must be a pure observer: snapshots on vs off changes no digest.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from dataclasses import replace
+
+import pytest
+
+from repro.api import (
+    CheckpointSpec,
+    DataSpec,
+    ExperimentSpec,
+    FaultSpec,
+    TrainSpec,
+    run,
+)
+from repro.api.spec import AsyncSpec
+from repro.faults import InjectedCrash
+
+DIGEST_KEYS = ("event_log_digest", "block_hashes_digest",
+               "balances_digest", "final_accuracy")
+
+
+def _digests(m):
+    return {k: m[k] for k in DIGEST_KEYS}
+
+
+def _spec(mode="sync", engine=True, rounds=6, seed=3, **kw):
+    return ExperimentSpec(
+        data=DataSpec(n_clients=40, n_batches=1, batch_size=16),
+        train=TrainSpec(strategy="bfln", rounds=rounds, sample_frac=0.3,
+                        n_clusters=2, local_epochs=1, mode=mode),
+        async_=AsyncSpec(buffer_size=4, concurrency=8),
+        engine=engine, seed=seed, **kw)
+
+
+def _crash_resume_roundtrip(tmp_path, mode, engine):
+    """Plain run; crashed-at-boundary-4 run; resume; compare digests."""
+    plain = run(_spec(mode=mode, engine=engine))
+
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path / "ck"))
+    crash = replace(_spec(mode=mode, engine=engine), checkpoint=ck,
+                    faults=FaultSpec(crash_round=4,
+                                     crash_phase="post_checkpoint",
+                                     crash_mode="exception"))
+    with pytest.raises(InjectedCrash):
+        run(crash)
+
+    resumed = run(replace(_spec(mode=mode, engine=engine), checkpoint=ck),
+                  resume_from=ck.dir)
+    assert resumed.manifest["resume_step"] == 4
+    assert _digests(resumed.manifest) == _digests(plain.manifest)
+    assert resumed.manifest["rounds_run"] == plain.manifest["rounds_run"]
+
+
+def test_checkpointing_is_a_pure_observer(tmp_path):
+    """Snapshots on vs off: identical digests, and the spec digests agree."""
+    plain = run(_spec())
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path / "ck"))
+    ckd = run(replace(_spec(), checkpoint=ck))
+    assert _digests(ckd.manifest) == _digests(plain.manifest)
+    assert ckd.manifest["checkpoints_written"] == 3      # boundaries 2, 4, 6
+    assert replace(_spec(), checkpoint=ck).config_digest() \
+        == _spec().config_digest()
+
+
+def test_crash_resume_sync_engine(tmp_path):
+    _crash_resume_roundtrip(tmp_path, "sync", True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,engine", [("sync", False), ("async", True),
+                                         ("async", False)])
+def test_crash_resume_matrix(tmp_path, mode, engine):
+    _crash_resume_roundtrip(tmp_path, mode, engine)
+
+
+def test_resume_from_explicit_snapshot_file(tmp_path):
+    plain = run(_spec())
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path / "ck"))
+    run(replace(_spec(), checkpoint=ck))
+    resumed = run(replace(_spec(), checkpoint=ck),
+                  resume_from=os.path.join(ck.dir, "ckpt_00000004.npz"))
+    assert resumed.manifest["resume_step"] == 4
+    assert _digests(resumed.manifest) == _digests(plain.manifest)
+
+
+def test_resume_falls_back_over_injected_corruption(tmp_path):
+    """The newest snapshot is bit-flipped by the fault schedule; resume must
+    fall back to the previous keep-last-K snapshot and still land on
+    identical digests."""
+    plain = run(_spec())
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path / "ck"))
+    crash = replace(_spec(), checkpoint=ck,
+                    faults=FaultSpec(corrupt_checkpoint_round=4,
+                                     crash_round=4,
+                                     crash_phase="post_checkpoint",
+                                     crash_mode="exception"))
+    with pytest.raises(InjectedCrash):
+        run(crash)
+    resumed = run(replace(_spec(), checkpoint=ck), resume_from=ck.dir)
+    assert resumed.manifest["resume_step"] == 2          # 4 was corrupt
+    assert _digests(resumed.manifest) == _digests(plain.manifest)
+
+
+def test_resume_after_truncation_fault(tmp_path):
+    plain = run(_spec())
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path / "ck"))
+    crash = replace(_spec(), checkpoint=ck,
+                    faults=FaultSpec(truncate_checkpoint_round=4,
+                                     crash_round=4,
+                                     crash_phase="post_checkpoint",
+                                     crash_mode="exception"))
+    with pytest.raises(InjectedCrash):
+        run(crash)
+    resumed = run(replace(_spec(), checkpoint=ck), resume_from=ck.dir)
+    assert resumed.manifest["resume_step"] == 2
+    assert _digests(resumed.manifest) == _digests(plain.manifest)
+
+
+def test_resume_refuses_a_different_experiment(tmp_path):
+    from repro.checkpoint import CheckpointError
+    ck = CheckpointSpec(interval=2, dir=str(tmp_path / "ck"))
+    run(replace(_spec(), checkpoint=ck))
+    with pytest.raises(CheckpointError, match="different experiment"):
+        run(replace(_spec(seed=7), checkpoint=ck), resume_from=ck.dir)
+
+
+# --------------------------------------------------------------------- #
+# the real thing: SIGKILL the process, resume in a fresh one
+# --------------------------------------------------------------------- #
+
+_KILL_SCRIPT = textwrap.dedent("""
+    from dataclasses import replace
+    from repro.api import (CheckpointSpec, DataSpec, ExperimentSpec,
+                           FaultSpec, TrainSpec, run)
+    from repro.api.spec import AsyncSpec
+    spec = ExperimentSpec(
+        data=DataSpec(n_clients=40, n_batches=1, batch_size=16),
+        train=TrainSpec(strategy="bfln", rounds=6, sample_frac=0.3,
+                        n_clusters=2, local_epochs=1),
+        async_=AsyncSpec(buffer_size=4, concurrency=8),
+        checkpoint=CheckpointSpec(interval=2, dir={ckdir!r}),
+        faults=FaultSpec(crash_round=4, crash_phase="post_checkpoint",
+                         crash_mode="sigkill"),
+        engine=True, seed=3)
+    run(spec)
+    raise SystemExit("survived an injected SIGKILL")
+""")
+
+
+@pytest.mark.slow
+def test_sigkill_and_resume_bit_identical(tmp_path):
+    ckdir = str(tmp_path / "ck")
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _KILL_SCRIPT.format(ckdir=ckdir)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == -9, (proc.returncode, proc.stderr[-2000:])
+    assert os.path.isdir(ckdir) and os.listdir(ckdir)
+
+    plain = run(_spec())
+    ck = CheckpointSpec(interval=2, dir=ckdir)
+    resumed = run(replace(_spec(), checkpoint=ck), resume_from=ckdir)
+    assert resumed.manifest["resume_step"] == 4
+    assert _digests(resumed.manifest) == _digests(plain.manifest)
+
+
+# --------------------------------------------------------------------- #
+# mesh8: sharded-arena snapshots resume bit-identically
+# --------------------------------------------------------------------- #
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import jax
+    assert len(jax.devices()) == 8, jax.devices()
+    import shutil
+    from dataclasses import replace
+    from repro.api import (CheckpointSpec, DataSpec, ExperimentSpec,
+                           FaultSpec, TrainSpec, run)
+    from repro.api.spec import MeshSpec
+    from repro.faults import InjectedCrash
+
+    def spec(**kw):
+        return ExperimentSpec(
+            data=DataSpec(n_clients=64, n_batches=1, batch_size=16),
+            train=TrainSpec(strategy="bfln", rounds=4, sample_frac=0.25,
+                            n_clusters=2, local_epochs=1),
+            mesh=MeshSpec(shards=8), engine=True, seed=3, **kw)
+
+    keys = ("event_log_digest", "block_hashes_digest", "balances_digest",
+            "final_accuracy")
+    plain = run(spec())
+    ck = CheckpointSpec(interval=2, dir={ckdir!r})
+    try:
+        run(spec(checkpoint=ck,
+                 faults=FaultSpec(crash_round=2,
+                                  crash_phase="post_checkpoint",
+                                  crash_mode="exception")))
+        raise SystemExit("crash never fired")
+    except InjectedCrash:
+        pass
+    resumed = run(spec(checkpoint=ck), resume_from={ckdir!r})
+    assert resumed.manifest["resume_step"] == 2
+    for k in keys:
+        assert resumed.manifest[k] == plain.manifest[k], k
+    print("MESH8_RESUME_OK")
+""")
+
+
+@pytest.mark.slow
+def test_mesh8_crash_resume_bit_identical(tmp_path):
+    ckdir = str(tmp_path / "ck")
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT.format(ckdir=ckdir)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH8_RESUME_OK" in proc.stdout
