@@ -22,7 +22,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.blockchain import (

@@ -1,0 +1,41 @@
+"""`repro.analysis` — the invariant auditor: machine-checked forms of the
+repo's load-bearing determinism / donation / partition-safety invariants.
+
+Six PRs of engine work rest on properties that used to live only in prose
+and example-based tests: replicate-before-combine (the GSPMD partial-sum
+1-ULP drift class), donated fixed-shape entries at exactly one compile
+each, bit-identical replay with obs/faults/checkpoint off, and no
+wall-clock or global-RNG reads on replay paths.  This package turns them
+into a two-layer static gate:
+
+**Layer 1 — source rules** (`repro.analysis.rules`): an AST rule engine
+(stdlib-only, no jax import) walking ``src/repro`` with per-rule findings
+and a committed baseline (``.analysis-baseline.json``) for grandfathered
+cases.  Rules: ``det-wallclock``, ``det-global-rng``, ``hot-host-sync``,
+``jit-donation``, ``tree-order``, ``trace-schema`` — the catalog with
+rationale and examples lives in ``docs/ANALYSIS.md``.
+
+**Layer 2 — compiled-artifact audit** (`repro.analysis.hlo_audit`): lowers
+the round engine's REAL jitted entries (sync + async, mesh 1 and forced-8)
+and verifies the post-SPMD HLO — input/output buffer aliasing for the
+donated arena, zero collectives in the replicated ``cohort_combine``
+program (an inserted all-reduce there is exactly the PR 7 drift bug), no
+f64 leaks with x64 off, and jit-cache stability under varying arrival
+masks.
+
+CLI: ``python -m repro.analysis`` (see ``--help``); exits nonzero on any
+unbaselined finding.  CI runs it with ``--baseline check`` and archives
+the digest-stamped JSON report.
+"""
+from repro.analysis.baseline import (  # noqa: F401
+    BASELINE_FILENAME,
+    check_baseline,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.findings import (  # noqa: F401
+    Finding,
+    build_report,
+    render_table,
+)
+from repro.analysis.rules import RULES, run_source_rules  # noqa: F401

@@ -1,0 +1,140 @@
+"""``python -m repro.analysis`` — run the invariant auditor.
+
+Layer 1 (AST source rules) runs in-process and needs nothing beyond the
+stdlib.  Layer 2 (compiled-artifact audit) runs in SUBPROCESSES, one per
+requested mesh width, because ``--xla_force_host_platform_device_count``
+must be set before jax imports — this is how a 1-device box audits the
+forced 8-device mesh (same pattern as the sharded-engine tests).
+
+Exit status: 0 when every finding is baselined, 1 otherwise (CI gate).
+
+Examples::
+
+    PYTHONPATH=src python -m repro.analysis                  # full audit
+    PYTHONPATH=src python -m repro.analysis --no-hlo         # Layer 1 only
+    PYTHONPATH=src python -m repro.analysis --baseline write # grandfather
+    PYTHONPATH=src python -m repro.analysis --json report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from repro.analysis.baseline import (
+    check_baseline,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.findings import (
+    Finding,
+    build_report,
+    render_table,
+    write_report,
+)
+from repro.analysis.rules import RULES, run_source_rules
+
+HLO_RULE_IDS = ("hlo-donation", "hlo-combine-collective", "hlo-f64",
+                "hlo-cache-stability", "hlo-selftest")
+
+
+def _find_root(start: str) -> str:
+    """Walk up from ``start`` to the directory containing ``src/repro``."""
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.isdir(os.path.join(cur, "src", "repro")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            raise SystemExit(f"no src/repro found above {start}")
+        cur = parent
+
+
+def _run_hlo_subprocess(root: str, shards: int
+                        ) -> tuple[list[Finding], dict]:
+    """One mesh width = one subprocess (jax device count is import-time)."""
+    env = dict(os.environ)
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if shards > 1:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count="
+                            f"{shards}").strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.hlo_audit",
+         "--shards", str(shards), "--json", "-"],
+        capture_output=True, text=True, cwd=root, env=env)
+    try:
+        doc = json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        raise SystemExit(
+            f"hlo audit subprocess (shards={shards}) failed:\n"
+            f"{proc.stdout}\n{proc.stderr}")
+    findings = [Finding(d["rule"], d["path"], d["line"], d["message"],
+                        d.get("detail", {}))
+                for d in doc["findings"]]
+    return findings, doc["info"]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="invariant auditor: AST source rules + compiled-HLO "
+                    "audit (catalog: docs/ANALYSIS.md)")
+    ap.add_argument("--root", default=".",
+                    help="repo root (or any dir beneath it)")
+    ap.add_argument("--baseline", choices=("check", "write"),
+                    default="check",
+                    help="check findings against .analysis-baseline.json "
+                         "(default) or grandfather the current ones")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the digest-stamped JSON report here")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip the compiled-artifact audit (Layer 2)")
+    ap.add_argument("--mesh-shards", default="1,8",
+                    help="comma-separated mesh widths for the HLO audit")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (Layer 1 only)")
+    args = ap.parse_args(argv)
+
+    root = _find_root(args.root)
+    src_root = os.path.join(root, "src", "repro")
+    trace_doc = os.path.join(root, "docs", "TRACE_SCHEMA.md")
+    rule_ids = args.rules.split(",") if args.rules else None
+
+    findings = run_source_rules(src_root, prefix="src/repro/",
+                                trace_doc=trace_doc, rule_ids=rule_ids)
+
+    hlo_info: dict | None = None
+    if not args.no_hlo and rule_ids is None:
+        hlo_info = {}
+        for shards in (int(s) for s in args.mesh_shards.split(",") if s):
+            hlo_findings, info = _run_hlo_subprocess(root, shards)
+            findings += hlo_findings
+            hlo_info[f"mesh_shards={shards}"] = info
+
+    if args.baseline == "write":
+        path = write_baseline(root, findings)
+        print(f"baseline written: {path} ({len(findings)} finding(s) — "
+              f"fill in every 'reason')")
+        return 0
+
+    entries = load_baseline(root)
+    fresh, grandfathered, stale = check_baseline(findings, entries)
+
+    all_rules = [r.id for r in RULES] + list(HLO_RULE_IDS)
+    report = build_report(fresh, grandfathered, stale, rules=all_rules,
+                          hlo_info=hlo_info)
+    if args.json:
+        write_report(report, args.json)
+
+    print(render_table(fresh, grandfathered, stale))
+    print(f"report digest: {report['report_digest']}")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""The committed baseline: grandfathered findings, each with a written reason.
+
+``.analysis-baseline.json`` at the repo root holds the findings the team
+has explicitly accepted (the JSON ``reason`` field is the mandatory
+"comment" — an entry without one is rejected).  Matching is by
+``(rule, path, message)``, never line number, so baseline entries survive
+unrelated edits; any baselined finding that stops firing is reported as
+*stale* so the file cannot silently rot.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis.findings import Finding
+
+BASELINE_FILENAME = ".analysis-baseline.json"
+BASELINE_SCHEMA = 1
+
+
+def baseline_path(root: str) -> str:
+    return os.path.join(root, BASELINE_FILENAME)
+
+
+def load_baseline(root: str) -> list[dict]:
+    path = baseline_path(root)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(f"baseline schema {doc.get('schema')!r} != "
+                         f"{BASELINE_SCHEMA} in {path}")
+    entries = doc.get("findings", [])
+    for e in entries:
+        for field in ("rule", "path", "match", "reason"):
+            if not isinstance(e.get(field), str) or not e[field].strip():
+                raise ValueError(
+                    f"baseline entry missing non-empty {field!r} (every "
+                    f"grandfathered finding needs a written reason): {e}")
+    return entries
+
+
+def write_baseline(root: str, findings: list[Finding]) -> str:
+    """``--baseline write``: grandfather the current findings.  Reasons are
+    stamped ``TODO`` so the checker still forces a human to write one."""
+    entries = [{"rule": f.rule, "path": f.path, "match": f.message,
+                "reason": "TODO: justify or fix"}
+               for f in sorted(findings)]
+    # keep reasons already written for findings that still fire
+    try:
+        old = {(e["rule"], e["path"], e["match"]): e["reason"]
+               for e in load_baseline(root)}
+    except ValueError:
+        old = {}
+    for e in entries:
+        e["reason"] = old.get((e["rule"], e["path"], e["match"]), e["reason"])
+    path = baseline_path(root)
+    with open(path, "w") as f:
+        json.dump({"schema": BASELINE_SCHEMA, "findings": entries}, f,
+                  indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def check_baseline(findings: list[Finding], entries: list[dict]
+                   ) -> tuple[list[Finding], list[Finding], list[dict]]:
+    """Split findings into (unbaselined, baselined) and report stale
+    baseline entries that matched nothing."""
+    index = {(e["rule"], e["path"], e["match"]): e for e in entries}
+    used: set[tuple[str, str, str]] = set()
+    fresh, grandfathered = [], []
+    for f in findings:
+        if f.key() in index:
+            used.add(f.key())
+            grandfathered.append(f)
+        else:
+            fresh.append(f)
+    stale = [e for k, e in index.items() if k not in used]
+    return fresh, grandfathered, stale

@@ -1,0 +1,207 @@
+"""Lightweight static call graph over ``src/repro`` (stdlib ``ast`` only).
+
+Purpose-built for ONE question: *which functions can execute inside the
+round engine's jitted entries?*  Those functions must never touch the host
+(``.item()``, ``np.asarray``, ``jax.debug.print``, …) — a host sync inside
+the donated step either breaks tracing or serialises the round.
+
+The graph deliberately **over-approximates** reachability (a false edge
+costs a baseline entry with a written reason; a missed edge hides a real
+host sync):
+
+* bare calls resolve within the defining module first, then through
+  ``from x import y`` (module- or function-local), then via
+  :data:`ALIASES`, then globally by name;
+* attribute calls and loads (``strategy.cohort_combine(...)``,
+  ``opt.update``, a function passed to ``vmap``/``tree.map`` by reference)
+  resolve to EVERY analyzed function with that bare name — this is how the
+  dynamic Strategy/Optimizer dispatch stays visible to a static pass;
+* a handful of callback parameter names (:data:`ALIASES`) map onto their
+  real implementations (``apply_fn`` → ``classifier.apply``, …).
+
+Roots are discovered, not hardcoded: any ``jax.jit(fn, ...)`` call in the
+root module (``core/engine.py``) marks ``fn`` as a jitted entry.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+# callback parameter name -> bare names of the functions actually bound
+# there at runtime (see RoundEngine.__init__ / SimulatedFederation)
+ALIASES: dict[str, tuple[str, ...]] = {
+    "apply_fn": ("apply",),
+    "embed_fn": ("embed",),
+    "stacked_apply_fn": ("apply_stacked",),
+    "predict_fn": ("apply", "apply_stacked"),
+    "loss_fn": ("local_loss",),
+    "grad_fn": ("local_loss",),
+    "partial_fn": ("cohort_partial",),
+    "combine_fn": ("cohort_combine",),
+}
+
+# attribute names never worth resolving (container/ndarray noise)
+_ATTR_STOPLIST = frozenset({
+    "append", "extend", "insert", "remove", "clear", "keys", "values",
+    "items", "get", "pop", "setdefault", "copy", "join", "split", "strip",
+    "format", "startswith", "endswith", "encode", "decode", "astype",
+    "reshape", "ravel", "transpose", "sum", "mean", "max", "min", "shape",
+    "dtype", "ndim", "size", "at", "set", "add", "push",
+})
+
+
+@dataclass
+class FunctionNode:
+    """One function/method definition (possibly nested)."""
+
+    module: str                       # repo-relative path
+    qualname: str
+    name: str
+    lineno: int
+    node: ast.AST = field(repr=False)
+    # outgoing references: ("name" | "attr" | "alias", identifier)
+    refs: list[tuple[str, str]] = field(default_factory=list)
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute/name chain -> "a.b.c" (None if not a chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _FunctionCollector(ast.NodeVisitor):
+    """Collect every function def in a module with its outgoing refs."""
+
+    def __init__(self, module: str):
+        self.module = module
+        self.stack: list[str] = []
+        self.functions: list[FunctionNode] = []
+        self.imports_from: dict[str, str] = {}   # local name -> source module
+
+    def visit_Import(self, node: ast.Import) -> None:
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module:
+            for alias in node.names:
+                self.imports_from[alias.asname or alias.name] = node.module
+        self.generic_visit(node)
+
+    def _visit_function(self, node) -> None:
+        qual = ".".join(self.stack + [node.name]) if self.stack else node.name
+        fn = FunctionNode(self.module, qual, node.name, node.lineno, node)
+        for child in ast.walk(node):
+            if child is node:
+                continue
+            if isinstance(child, ast.Name) and isinstance(child.ctx, ast.Load):
+                fn.refs.append(("name", child.id))
+                if child.id in ALIASES:
+                    fn.refs += [("alias", a) for a in ALIASES[child.id]]
+            elif isinstance(child, ast.Attribute) \
+                    and isinstance(child.ctx, ast.Load) \
+                    and child.attr not in _ATTR_STOPLIST:
+                fn.refs.append(("attr", child.attr))
+                if child.attr in ALIASES:
+                    fn.refs += [("alias", a) for a in ALIASES[child.attr]]
+        self.functions.append(fn)
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+
+@dataclass
+class CallGraph:
+    by_name: dict[str, list[FunctionNode]]
+    by_module: dict[str, list[FunctionNode]]
+    imports: dict[str, dict[str, str]]          # module -> local -> source
+
+    def resolve(self, fn: FunctionNode) -> list[FunctionNode]:
+        """All functions ``fn`` may reference (over-approximate)."""
+        out: list[FunctionNode] = []
+        same_module = {f.name: [] for f in self.by_module.get(fn.module, [])}
+        for f in self.by_module.get(fn.module, []):
+            same_module[f.name].append(f)
+        mod_imports = self.imports.get(fn.module, {})
+        for kind, name in fn.refs:
+            if kind == "name":
+                if name in same_module:
+                    out += same_module[name]
+                elif name in mod_imports or name in self.by_name:
+                    # from-import or global fallback: match by bare name
+                    out += self.by_name.get(name, [])
+            else:   # attr / alias: global dynamic-dispatch match
+                out += self.by_name.get(name, [])
+        return out
+
+
+def build_graph(py_files: dict[str, ast.Module]) -> CallGraph:
+    """``py_files``: repo-relative path -> parsed module."""
+    by_name: dict[str, list[FunctionNode]] = {}
+    by_module: dict[str, list[FunctionNode]] = {}
+    imports: dict[str, dict[str, str]] = {}
+    for path, tree in py_files.items():
+        col = _FunctionCollector(path)
+        col.visit(tree)
+        by_module[path] = col.functions
+        imports[path] = col.imports_from
+        for fn in col.functions:
+            by_name.setdefault(fn.name, []).append(fn)
+    return CallGraph(by_name, by_module, imports)
+
+
+def jit_roots(graph: CallGraph, root_module: str, tree: ast.Module
+              ) -> list[FunctionNode]:
+    """Functions passed to ``jax.jit(...)`` anywhere in ``root_module``
+    (module level or inside a method) — the engine's jitted entry points."""
+    roots: list[FunctionNode] = []
+    mod_fns = {f.name: f for f in graph.by_module.get(root_module, [])}
+    for child in ast.walk(tree):
+        if not isinstance(child, ast.Call):
+            continue
+        if _dotted(child.func) not in ("jax.jit", "jit"):
+            continue
+        for arg in child.args[:1]:
+            target = None
+            if isinstance(arg, ast.Name):
+                target = arg.id
+            elif isinstance(arg, ast.Call):           # functools.partial(f,…)
+                inner = arg.args[0] if arg.args else None
+                if isinstance(inner, ast.Name):
+                    target = inner.id
+            if target and target in mod_fns:
+                roots.append(mod_fns[target])
+    # @jax.jit decorated functions are entries too
+    for fn in graph.by_module.get(root_module, []):
+        decos = getattr(fn.node, "decorator_list", [])
+        if any(_dotted(d) in ("jax.jit", "jit") for d in decos):
+            roots.append(fn)
+    return roots
+
+
+def reachable(graph: CallGraph, roots: list[FunctionNode]
+              ) -> set[tuple[str, str]]:
+    """Transitive closure from the roots; returns {(module, qualname)}."""
+    seen: set[tuple[str, str]] = set()
+    frontier = list(roots)
+    while frontier:
+        fn = frontier.pop()
+        key = (fn.module, fn.qualname)
+        if key in seen:
+            continue
+        seen.add(key)
+        frontier += graph.resolve(fn)
+    return seen

@@ -1,0 +1,91 @@
+"""Finding records + the digest-stamped JSON report / human table.
+
+A :class:`Finding` is one rule violation at one source (or HLO) location.
+Messages are written to be *stable across unrelated edits* — they name the
+offending construct, never the line number — so baseline entries keyed on
+``(rule, path, message)`` survive code motion (the line is still recorded
+for humans and editors).
+
+The JSON report follows the manifest convention (`repro.api.runner`): a
+flat, sorted-key record stamped with the sha256 of its own canonical
+payload (``report_digest``), so two runs over identical trees produce
+byte-identical reports and any diff is a real drift.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field
+
+REPORT_SCHEMA = 1
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation: ``rule`` id, repo-relative ``path``, 1-based
+    ``line`` (0 for file/tree-level findings), human ``message``."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    # extra context (e.g. the engine entry or mesh width for HLO findings);
+    # excluded from baseline matching
+    detail: dict = field(default_factory=dict, compare=False)
+
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.message)
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+def build_report(findings: list[Finding], baselined: list[Finding],
+                 stale_baseline: list[dict], *, rules: list[str],
+                 hlo_info: dict | None = None) -> dict:
+    """The machine-readable audit record (sorted keys, digest-stamped)."""
+    report = {
+        "schema": REPORT_SCHEMA,
+        "rules": sorted(rules),
+        "findings": [asdict(f) for f in sorted(findings)],
+        "baselined": [asdict(f) for f in sorted(baselined)],
+        "stale_baseline": stale_baseline,
+        "counts": {
+            "findings": len(findings),
+            "baselined": len(baselined),
+            "stale_baseline": len(stale_baseline),
+        },
+    }
+    if hlo_info is not None:
+        report["hlo"] = hlo_info
+    payload = json.dumps(report, sort_keys=True,
+                         separators=(",", ":")).encode()
+    report["report_digest"] = hashlib.sha256(payload).hexdigest()
+    return report
+
+
+def write_report(report: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, sort_keys=True, indent=1)
+        f.write("\n")
+
+
+def render_table(findings: list[Finding], baselined: list[Finding],
+                 stale_baseline: list[dict]) -> str:
+    """The human half of the CLI output."""
+    lines: list[str] = []
+    if findings:
+        lines.append(f"UNBASELINED FINDINGS ({len(findings)}):")
+        lines += [f"  {f.format()}" for f in sorted(findings)]
+    else:
+        lines.append("no unbaselined findings")
+    if baselined:
+        lines.append(f"baselined (grandfathered) findings: {len(baselined)}")
+        lines += [f"  {f.format()}" for f in sorted(baselined)]
+    if stale_baseline:
+        lines.append(f"stale baseline entries (no longer firing): "
+                     f"{len(stale_baseline)}")
+        lines += [f"  [{e['rule']}] {e['path']}: {e['match']}"
+                  for e in stale_baseline]
+    return "\n".join(lines)

@@ -1,0 +1,494 @@
+"""Layer 1 of the invariant auditor: AST source rules over ``src/repro``.
+
+Stdlib-only (``ast`` + ``importlib``); deliberately importable and runnable
+on a box without jax.  Each rule is a named check over the parsed tree —
+the catalog with rationale and worked examples is ``docs/ANALYSIS.md``.
+
+Rule ids (stable; used in baseline entries and CI output):
+
+========================  ====================================================
+``det-wallclock``         no wall-clock reads in replay-relevant modules
+``det-global-rng``        no global/module-level RNG outside seeded Generators
+``hot-host-sync``         no host syncs reachable from the engine's jit entries
+``jit-donation``          every ``jax.jit`` in core/engine.py states a donation
+                          decision (``donate_argnums`` present, or baselined)
+``tree-order``            dict iteration feeding a reduction must be
+                          order-fixed in core/baselines.py / utils/tree.py
+``trace-schema``          recorder names ⊆ obs/names.py registry ⊆ doc, and
+                          doc names resolve back against the registry
+========================  ====================================================
+
+Paths inside findings are ``prefix + path-relative-to-src-root`` so the repo
+run reports ``src/repro/core/engine.py`` while test fixtures can use bare
+relative trees.
+"""
+from __future__ import annotations
+
+import ast
+import importlib.util
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.analysis.callgraph import (
+    CallGraph,
+    _dotted,
+    build_graph,
+    jit_roots,
+    reachable,
+)
+from repro.analysis.findings import Finding
+
+ENGINE_MODULE = "core/engine.py"
+TREE_ORDER_MODULES = ("core/baselines.py", "utils/tree.py")
+NAMES_MODULE = "obs/names.py"
+
+# modules whose execution must be bit-identical under replay
+REPLAY_DIR_PREFIXES = ("sim/", "core/", "blockchain/")
+REPLAY_FILES = ("checkpoint/state.py",)
+REPLAY_EXEMPT_PREFIXES = ("obs/",)
+
+WALLCLOCK_CALLS = frozenset({
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "date.today", "datetime.date.today",
+})
+
+# np.random.<these> build seeded generators — the sanctioned plumbing
+SEEDED_RNG_OK = frozenset({
+    "default_rng", "Generator", "PCG64", "Philox", "SeedSequence",
+    "BitGenerator", "MT19937",
+})
+STDLIB_RNG_OK = frozenset({"Random", "SystemRandom"})
+
+HOST_TRANSFER_CALLS = frozenset({
+    "np.asarray", "numpy.asarray", "np.array", "numpy.array",
+    "jax.device_get", "device_get",
+})
+DEBUG_CALLS = frozenset({
+    "jax.debug.print", "jax.debug.callback", "debug.print", "debug.callback",
+})
+# attribute access that makes a float()/int() cast static (shape arithmetic)
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "itemsize", "nbytes"})
+_STATIC_CALLS = frozenset({"len", "prod", "np.prod", "numpy.prod",
+                           "math.prod", "tree_size"})
+
+_TRACE_DOC_FAMILIES = frozenset({
+    "round", "flush", "chain", "ckpt", "run", "fault", "async", "ledger",
+    "engine", "arena", "rounds",
+})
+_TRACE_DOC_BARE = frozenset({"compile", "compiles"})
+_RECORDER_RECEIVERS = frozenset({"obs", "rec", "recorder", "_obs", "_rec"})
+
+
+@dataclass
+class RuleContext:
+    src_root: str
+    prefix: str
+    files: dict[str, ast.Module]
+    sources: dict[str, str]
+    graph: CallGraph
+    hot: set[tuple[str, str]] = field(default_factory=set)
+    trace_doc_path: str | None = None      # filesystem path to TRACE_SCHEMA.md
+    trace_doc_report_path: str = "docs/TRACE_SCHEMA.md"
+
+    def p(self, rel: str) -> str:
+        return self.prefix + rel
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    run: Callable[[RuleContext], list[Finding]]
+
+
+def _walk_shallow(node: ast.AST):
+    """Yield descendants of ``node`` without entering nested function/class
+    bodies (those are separate FunctionNodes and are audited on their own)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(child))
+
+
+def _is_replay_module(rel: str) -> bool:
+    if rel.startswith(REPLAY_EXEMPT_PREFIXES):
+        return False
+    return rel.startswith(REPLAY_DIR_PREFIXES) or rel in REPLAY_FILES
+
+
+# --------------------------------------------------------------------------- #
+# det-wallclock
+# --------------------------------------------------------------------------- #
+def _rule_det_wallclock(ctx: RuleContext) -> list[Finding]:
+    out = []
+    for rel, tree in ctx.files.items():
+        if not _is_replay_module(rel):
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if dotted in WALLCLOCK_CALLS:
+                out.append(Finding(
+                    "det-wallclock", ctx.p(rel), node.lineno,
+                    f"wall-clock read `{dotted}()` in replay-relevant module"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# det-global-rng
+# --------------------------------------------------------------------------- #
+def _rule_det_global_rng(ctx: RuleContext) -> list[Finding]:
+    out = []
+    for rel, tree in ctx.files.items():
+        # does this module `import random` (the stdlib module)?
+        has_stdlib_random = any(
+            isinstance(n, ast.Import)
+            and any(a.name == "random" for a in n.names)
+            for n in ast.walk(tree))
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if not dotted:
+                continue
+            for np_prefix in ("np.random.", "numpy.random.",
+                              "jnp.random."):
+                if dotted.startswith(np_prefix):
+                    fn = dotted[len(np_prefix):]
+                    if fn not in SEEDED_RNG_OK:
+                        out.append(Finding(
+                            "det-global-rng", ctx.p(rel), node.lineno,
+                            f"global RNG call `{dotted}` (use a seeded "
+                            f"np.random.Generator)"))
+            if has_stdlib_random and dotted.startswith("random.") \
+                    and dotted.count(".") == 1:
+                fn = dotted.split(".", 1)[1]
+                if fn not in STDLIB_RNG_OK:
+                    out.append(Finding(
+                        "det-global-rng", ctx.p(rel), node.lineno,
+                        f"global RNG call `{dotted}` (use a seeded "
+                        f"random.Random instance)"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# hot-host-sync
+# --------------------------------------------------------------------------- #
+def _param_names(node) -> set[str]:
+    a = node.args
+    names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    for extra in (a.vararg, a.kwarg):
+        if extra is not None:
+            names.add(extra.arg)
+    return names - {"self", "cls"}
+
+
+def _cast_is_dynamic(call: ast.Call, params: set[str]) -> bool:
+    """A ``float(x)``/``int(x)`` cast is a host sync only when ``x`` can be a
+    traced array: it mentions a function parameter and no static attribute
+    (``.shape``/``.dtype``/…) or size helper (``len``/``prod``)."""
+    if not call.args:
+        return False
+    arg = call.args[0]
+    mentions_param = any(
+        isinstance(n, ast.Name) and n.id in params for n in ast.walk(arg))
+    if not mentions_param:
+        return False
+    for n in ast.walk(arg):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            return False
+        if isinstance(n, ast.Call) and _dotted(n.func) in _STATIC_CALLS:
+            return False
+    return True
+
+
+def _rule_hot_host_sync(ctx: RuleContext) -> list[Finding]:
+    out = []
+    for rel, fns in ctx.graph.by_module.items():
+        for fn in fns:
+            if (fn.module, fn.qualname) not in ctx.hot:
+                continue
+            params = _param_names(fn.node)
+            for node in _walk_shallow(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = _dotted(node.func)
+                msg = None
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    msg = f"`.item()` host sync in jit-reachable " \
+                          f"`{fn.qualname}`"
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "block_until_ready":
+                    msg = f"`.block_until_ready()` in jit-reachable " \
+                          f"`{fn.qualname}`"
+                elif dotted in HOST_TRANSFER_CALLS:
+                    msg = f"`{dotted}` host transfer in jit-reachable " \
+                          f"`{fn.qualname}`"
+                elif dotted in DEBUG_CALLS:
+                    msg = f"`{dotted}` in jit-reachable `{fn.qualname}`"
+                elif dotted in ("float", "int", "bool") \
+                        and _cast_is_dynamic(node, params):
+                    msg = f"`{dotted}()` cast of a possibly-traced value " \
+                          f"in jit-reachable `{fn.qualname}`"
+                if msg:
+                    out.append(Finding("hot-host-sync", ctx.p(rel),
+                                       node.lineno, msg))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# jit-donation
+# --------------------------------------------------------------------------- #
+def _rule_jit_donation(ctx: RuleContext) -> list[Finding]:
+    tree = ctx.files.get(ENGINE_MODULE)
+    if tree is None:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func) not in ("jax.jit", "jit"):
+            continue
+        kwargs = {k.arg for k in node.keywords}
+        if kwargs & {"donate_argnums", "donate_argnames"}:
+            continue
+        target = "<expr>"
+        if node.args:
+            if isinstance(node.args[0], ast.Name):
+                target = node.args[0].id
+            elif isinstance(node.args[0], ast.Lambda):
+                target = "<lambda>"
+        out.append(Finding(
+            "jit-donation", ctx.p(ENGINE_MODULE), node.lineno,
+            f"jax.jit(`{target}`) without donate_argnums — entry keeps "
+            f"input buffers alive"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# tree-order
+# --------------------------------------------------------------------------- #
+def _unordered_dict_iter(iter_node: ast.AST) -> str | None:
+    """Return ``values``/``items`` if the iterable is an unsorted dict view."""
+    if isinstance(iter_node, ast.Call) \
+            and isinstance(iter_node.func, ast.Name) \
+            and iter_node.func.id in ("sorted", "list", "tuple") \
+            and iter_node.func.id == "sorted":
+        return None
+    for n in ast.walk(iter_node):
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                and n.func.attr in ("values", "items") and not n.args:
+            return n.func.attr
+    return None
+
+
+def _rule_tree_order(ctx: RuleContext) -> list[Finding]:
+    out = []
+    for rel in TREE_ORDER_MODULES:
+        tree = ctx.files.get(rel)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            iters = []
+            if isinstance(node, ast.For):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters += [g.iter for g in node.generators]
+            elif isinstance(node, ast.Call) \
+                    and _dotted(node.func) in ("sum", "min", "max", "reduce",
+                                               "functools.reduce"):
+                iters += node.args
+            for it in iters:
+                attr = _unordered_dict_iter(it)
+                if attr:
+                    out.append(Finding(
+                        "tree-order", ctx.p(rel), node.lineno,
+                        f"unordered dict iteration `.{attr}()` feeding a "
+                        f"reduction — wrap in sorted() or iterate "
+                        f"jax.tree leaves"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# trace-schema
+# --------------------------------------------------------------------------- #
+def _load_names_registry(path: str):
+    spec = importlib.util.spec_from_file_location("_repro_obs_names", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _literal_name(arg: ast.AST) -> tuple[str, bool] | None:
+    """(name, is_prefix) for a string literal or f-string literal prefix."""
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return arg.value, False
+    if isinstance(arg, ast.JoinedStr) and arg.values:
+        head = arg.values[0]
+        if isinstance(head, ast.Constant) and isinstance(head.value, str):
+            return head.value, True
+    return None
+
+
+def _receiver_is_recorder(func: ast.Attribute) -> bool:
+    chain = _dotted(func.value)
+    if chain is None:
+        return False
+    return chain.split(".")[-1] in _RECORDER_RECEIVERS
+
+
+def _doc_tokens(doc_text: str) -> set[str]:
+    """Backticked dotted names in the schema doc, normalized: ``<...>`` and
+    ``*`` placeholders become prefixes (``engine.calls.<entry>`` ->
+    ``engine.calls.``)."""
+    toks = set()
+    for raw in re.findall(r"`([A-Za-z0-9_.<>*]+)`", doc_text):
+        tok = re.split(r"[<*]", raw)[0]
+        if not tok:
+            continue
+        fam = tok.split(".")[0]
+        # bare family words (`round`, `chain`) are prose references to a
+        # category, not metric names — only dotted tokens (or the known
+        # dotless metrics) participate in the cross-check
+        if (fam in _TRACE_DOC_FAMILIES and "." in tok) \
+                or tok in _TRACE_DOC_BARE:
+            toks.add(tok)
+    return toks
+
+
+def _rule_trace_schema(ctx: RuleContext) -> list[Finding]:
+    names_path = os.path.join(ctx.src_root, NAMES_MODULE)
+    if not os.path.exists(names_path):
+        return []
+    reg = _load_names_registry(names_path)
+    out = []
+
+    # 1. every recorder call site uses a registered name
+    for rel, tree in ctx.files.items():
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in reg.METHOD_NAME_SETS
+                    and _receiver_is_recorder(node.func)
+                    and node.args):
+                continue
+            lit = _literal_name(node.args[0])
+            if lit is None:
+                continue
+            name, is_prefix = lit
+            allowed = reg.METHOD_NAME_SETS[node.func.attr]
+            if is_prefix:
+                ok = any(n.startswith(name) for n in allowed) \
+                    or reg.is_registered(name)
+            else:
+                ok = reg.is_registered(name, allowed)
+            if not ok:
+                out.append(Finding(
+                    "trace-schema", ctx.p(rel), node.lineno,
+                    f"unregistered {node.func.attr}() name `{name}` — add "
+                    f"to obs/names.py and docs/TRACE_SCHEMA.md"))
+
+    # 2 & 3. registry <-> schema doc cross-check
+    if ctx.trace_doc_path and os.path.exists(ctx.trace_doc_path):
+        with open(ctx.trace_doc_path) as f:
+            toks = _doc_tokens(f.read())
+        prefixes = {t for t in toks if t.endswith(".")}
+        doc_rel = ctx.trace_doc_report_path
+        for name in sorted(reg.ALL_NAMES):
+            if name in toks or any(name.startswith(p) for p in prefixes):
+                continue
+            out.append(Finding(
+                "trace-schema", doc_rel, 0,
+                f"registered name `{name}` is not documented in "
+                f"TRACE_SCHEMA.md"))
+        for tok in sorted(toks):
+            if tok.endswith("."):
+                ok = tok in reg.DYNAMIC_PREFIXES \
+                    or any(n.startswith(tok) for n in reg.ALL_NAMES)
+            else:
+                ok = reg.is_registered(tok)
+            if not ok:
+                out.append(Finding(
+                    "trace-schema", doc_rel, 0,
+                    f"TRACE_SCHEMA.md names `{tok}` which is not in the "
+                    f"obs/names.py registry"))
+    return out
+
+
+RULES: list[Rule] = [
+    Rule("det-wallclock",
+         "no wall-clock reads in replay-relevant modules",
+         _rule_det_wallclock),
+    Rule("det-global-rng",
+         "no global/module-level RNG outside seeded-Generator plumbing",
+         _rule_det_global_rng),
+    Rule("hot-host-sync",
+         "no host syncs in functions reachable from the engine's jit entries",
+         _rule_hot_host_sync),
+    Rule("jit-donation",
+         "every jax.jit in core/engine.py states a donation decision",
+         _rule_jit_donation),
+    Rule("tree-order",
+         "dict iteration feeding a reduction must be order-fixed",
+         _rule_tree_order),
+    Rule("trace-schema",
+         "recorder names, obs/names.py registry, and TRACE_SCHEMA.md agree",
+         _rule_trace_schema),
+]
+
+
+def collect_sources(src_root: str) -> tuple[dict[str, ast.Module],
+                                            dict[str, str]]:
+    files: dict[str, ast.Module] = {}
+    sources: dict[str, str] = {}
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fname)
+            rel = os.path.relpath(full, src_root).replace(os.sep, "/")
+            with open(full) as f:
+                src = f.read()
+            files[rel] = ast.parse(src, filename=rel)
+            sources[rel] = src
+    return files, sources
+
+
+def build_context(src_root: str, *, prefix: str = "",
+                  trace_doc: str | None = None,
+                  trace_doc_report_path: str = "docs/TRACE_SCHEMA.md"
+                  ) -> RuleContext:
+    files, sources = collect_sources(src_root)
+    graph = build_graph(files)
+    roots = jit_roots(graph, ENGINE_MODULE, files[ENGINE_MODULE]) \
+        if ENGINE_MODULE in files else []
+    hot = reachable(graph, roots)
+    return RuleContext(src_root=src_root, prefix=prefix, files=files,
+                       sources=sources, graph=graph, hot=hot,
+                       trace_doc_path=trace_doc,
+                       trace_doc_report_path=trace_doc_report_path)
+
+
+def run_source_rules(src_root: str, *, prefix: str = "",
+                     trace_doc: str | None = None,
+                     rule_ids: list[str] | None = None) -> list[Finding]:
+    """Run all (or the selected) Layer-1 rules over ``src_root``."""
+    ctx = build_context(src_root, prefix=prefix, trace_doc=trace_doc)
+    out: list[Finding] = []
+    for rule in RULES:
+        if rule_ids is not None and rule.id not in rule_ids:
+            continue
+        out.extend(rule.run(ctx))
+    return sorted(set(out))

@@ -142,8 +142,6 @@ class RoundEngine:
         pad_mult = self.cohort_shards
 
         if sharding is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
-
             from repro.launch.sharding import cohort_shardings
             cshard, replicated = cohort_shardings(sharding.mesh)
 
@@ -249,7 +247,24 @@ class RoundEngine:
                 # cohort block replicates, never the (n, N) arena.
                 sp_rep = jax.tree.map(_rep, res.params)
                 sp_b, partial_b = barrier_combine_inputs(sp_rep, partial)
-                agg = strategy.cohort_combine(sp_b, partial_b, arrived_p, k)
+                # named scope -> HLO metadata op_name: lets the compiled-
+                # artifact audit (repro.analysis.hlo_audit) attribute any
+                # collective inside the combine phase and fail the build —
+                # an all-reduce here IS the partial-sum drift bug.  The
+                # OUTPUTS are pinned replicated as well: constraining only
+                # the inputs leaves GSPMD free to propagate the row-sharded
+                # scatter layout backwards and partition the combine body
+                # (kmeans/eigh dots pick up partial-sum all-reduces); with
+                # both ends pinned the body compiles device-local and any
+                # resharding happens after the scope, on the small outputs
+                with jax.named_scope("cohort_combine"):
+                    # arrived_p also feeds the cohort-SHARDED partial stage;
+                    # the combine gets its own replicated pin, or GSPMD
+                    # propagates the sharding through the arrival weighting
+                    # into the clustering interior
+                    agg = strategy.cohort_combine(sp_b, partial_b,
+                                                  _rep(arrived_p), k)
+                    agg = jax.tree.map(_rep, agg)
                 local_rows = layout.flatten(res.params)    # (k_pad, N) sharded
                 residues = fingerprint_rows(bitcast_u32(local_rows))[:k]
                 mean_loss = jnp.mean(res.mean_loss[:k])
@@ -261,7 +276,9 @@ class RoundEngine:
                 # aggregation over ALL cohort slots (stragglers burn local
                 # compute too); only the aggregation weights honour the
                 # arrival mask
-                agg = strategy.aggregate_cohort(res.params, cx, cy, arrived)
+                with jax.named_scope("cohort_combine"):
+                    agg = strategy.aggregate_cohort(res.params, cx, cy,
+                                                    arrived)
                 local_rows = layout.flatten(res.params)
                 residues = fingerprint_rows(bitcast_u32(local_rows))
                 mean_loss = jnp.mean(res.mean_loss)
@@ -387,6 +404,17 @@ class RoundEngine:
         this dict.
         """
         return {name: fn._cache_size() for name, fn in self._entries.items()}
+
+    def entry_names(self) -> list[str]:
+        """The engine's jitted entry points, in a fixed order."""
+        return list(self._entries)
+
+    def lower_entry(self, name: str, *args):
+        """Lower (without executing) the RAW jitted entry ``name`` on
+        ``args`` — the hook the compiled-artifact audit uses to inspect the
+        exact programs the driver runs.  Bypasses the obs call-count
+        wrappers so lowering never shows up as an engine call."""
+        return self._entries[name].lower(*args)
 
     def format_digests(self, residues) -> list[str]:
         """(k, 2) uint32 residues -> per-client digest strings (host side)."""

@@ -14,7 +14,6 @@ Grid: (n_param_tiles,); block = (m_pad, BN).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.cluster_agg import cluster_agg_pallas, mixing_matrix  # noqa: F401
 from repro.kernels.fingerprint import fingerprint_pallas

@@ -134,3 +134,59 @@ def collective_counts(hlo_text: str) -> dict[str, int]:
             if m:
                 counts[m.group(4)] += w
     return dict(counts)
+
+
+# --------------------------------------------------------------------------- #
+# static-audit helpers (repro.analysis.hlo_audit)
+# --------------------------------------------------------------------------- #
+
+_ALIAS_HEADER_RE = re.compile(r"input_output_alias=\{")
+_ALIAS_PARAM_RE = re.compile(r"\(\s*(\d+)\s*,")
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def donated_params(hlo_text: str) -> set[int]:
+    """Parameter indices the compiled module aliases to outputs — i.e. the
+    buffers XLA actually donated.  Parsed from the module header's
+    ``input_output_alias={ {out}: (param, {index}, may-alias), ... }``
+    (balanced-brace scan; the header is one logical line)."""
+    m = _ALIAS_HEADER_RE.search(hlo_text)
+    if not m:
+        return set()
+    depth, i = 1, m.end()
+    while i < len(hlo_text) and depth > 0:
+        if hlo_text[i] == "{":
+            depth += 1
+        elif hlo_text[i] == "}":
+            depth -= 1
+        i += 1
+    body = hlo_text[m.end():i - 1]
+    # each alias entry is `{out_index}: (param_number, {param_index}[, kind])`
+    return {int(p) for p in _ALIAS_PARAM_RE.findall(body)}
+
+
+def collective_lines(hlo_text: str) -> list[tuple[str, str, str]]:
+    """Every collective op line: (computation, kind, op_name metadata).
+
+    ``op_name`` carries the jax ``named_scope`` path, so the audit can
+    attribute a collective to e.g. the ``cohort_combine`` phase."""
+    out: list[tuple[str, str, str]] = []
+    for cname, lines in _split_computations(hlo_text).items():
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            nm = _OP_NAME_RE.search(line)
+            out.append((cname, m.group(4), nm.group(1) if nm else ""))
+    return out
+
+
+_F64_RESULT_RE = re.compile(r"=\s*(?:\([^)]*\bf64\[|f64\[)")
+
+
+def f64_op_count(hlo_text: str) -> int:
+    """Number of HLO op lines producing an f64 result — with jax x64 off
+    this must be zero (a hit means a silent widen, e.g. a python float
+    folded through np and back)."""
+    return sum(1 for line in hlo_text.splitlines()
+               if _F64_RESULT_RE.search(line))

@@ -13,7 +13,6 @@ pattern position with leaves stacked over ``n_periods``, so decode is the same
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

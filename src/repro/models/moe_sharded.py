@@ -19,7 +19,6 @@ grok's 8 experts fall back to the dense-dispatch path).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ same scan.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -29,7 +29,6 @@ from repro.models.layers import (
     ffn_apply,
     ffn_init,
     init_norm,
-    is_gated,
     norm,
     rms_norm,
     sinusoidal_positions,

@@ -19,6 +19,15 @@ balances and final accuracy bit-identical — observability may time and
 count, never perturb (pinned by ``tests/test_obs_invariance.py``).
 """
 from repro.obs.metrics import MetricsRegistry, Summary  # noqa: F401
+from repro.obs.names import (  # noqa: F401
+    ALL_NAMES,
+    COUNTER_NAMES,
+    DYNAMIC_PREFIXES,
+    EVENT_NAMES,
+    GAUGE_NAMES,
+    SERIES_NAMES,
+    SPAN_NAMES,
+)
 from repro.obs.recorder import (  # noqa: F401
     NULL_RECORDER,
     FlightRecorder,

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import masked_tree_sum, tree_sum
-from repro.utils.tree import tree_index, tree_stack
+from repro.utils.tree import tree_stack
 
 Pytree = Any
 

@@ -1,0 +1,359 @@
+"""The invariant auditor (`repro.analysis`).
+
+Layer 1: each AST rule gets a tripwire fixture (a tiny tree that MUST
+fire it) and a clean twin (that must not) — the rules are themselves
+code, and a rule that silently stopped matching would gate nothing.
+Layer 2: the compiled-artifact audit runs against the REAL engine entries
+(mesh 1 in-process; mesh 8 in-process when devices allow, else via the
+self-forcing subprocess, same pattern as the sharded-engine tests), and a
+deliberately partition-unsafe toy proves the combine detector actually
+sees reduction collectives.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.analysis import (
+    check_baseline,
+    load_baseline,
+    run_source_rules,
+    write_baseline,
+)
+from repro.analysis.findings import Finding, build_report
+from repro.launch.hlo import donated_params, f64_op_count
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+N_DEV = len(jax.devices())
+mesh8 = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _scan(tmp_path, files, rules=None, trace_doc=None):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    doc = None
+    if trace_doc is not None:
+        d = tmp_path / "docs" / "TRACE_SCHEMA.md"
+        d.parent.mkdir(parents=True, exist_ok=True)
+        d.write_text(trace_doc)
+        doc = str(d)
+    return run_source_rules(str(tmp_path), trace_doc=doc, rule_ids=rules)
+
+
+_NAMES_PY = """
+    SPAN_NAMES = frozenset({"round.total"})
+    EVENT_NAMES = frozenset({"compile"})
+    COUNTER_NAMES = frozenset({"compiles"})
+    GAUGE_NAMES = frozenset({"run.final_accuracy"})
+    SERIES_NAMES = frozenset({"ledger.paid"})
+    DYNAMIC_PREFIXES = ("engine.calls.",)
+    METHOD_NAME_SETS = {"span": SPAN_NAMES, "event": EVENT_NAMES,
+                        "inc": COUNTER_NAMES, "set_gauge": GAUGE_NAMES,
+                        "observe": SERIES_NAMES, "point": SERIES_NAMES}
+    ALL_NAMES = (SPAN_NAMES | EVENT_NAMES | COUNTER_NAMES | GAUGE_NAMES
+                 | SERIES_NAMES)
+    def is_registered(name, allowed=None):
+        pool = ALL_NAMES if allowed is None else allowed
+        if name in pool:
+            return True
+        return any(name.startswith(p) or p.startswith(name)
+                   for p in DYNAMIC_PREFIXES)
+"""
+
+
+# --------------------------------------------------------------------------- #
+# Layer 1 rules: tripwire + clean twin per rule
+# --------------------------------------------------------------------------- #
+
+def test_det_wallclock_fires_in_replay_module(tmp_path):
+    fs = _scan(tmp_path, {"core/clock.py": """
+        import time
+        def stamp():
+            return time.time()
+    """}, rules=["det-wallclock"])
+    assert [f.rule for f in fs] == ["det-wallclock"]
+    assert "time.time" in fs[0].message
+
+
+def test_det_wallclock_exempts_obs_and_clean_code(tmp_path):
+    fs = _scan(tmp_path, {
+        "obs/clock.py": "import time\ndef stamp():\n    return time.time()\n",
+        "core/pure.py": "def f(x):\n    return x + 1\n",
+    }, rules=["det-wallclock"])
+    assert fs == []
+
+
+def test_det_global_rng_fires_on_module_level_np_random(tmp_path):
+    fs = _scan(tmp_path, {"core/noise.py": """
+        import numpy as np
+        X = np.random.rand(3)
+    """}, rules=["det-global-rng"])
+    assert [f.rule for f in fs] == ["det-global-rng"]
+
+
+def test_det_global_rng_fires_on_bare_stdlib_random(tmp_path):
+    fs = _scan(tmp_path, {"sim/jitter.py": """
+        import random
+        def f():
+            return random.random()
+    """}, rules=["det-global-rng"])
+    assert len(fs) == 1
+
+
+def test_det_global_rng_allows_seeded_generators(tmp_path):
+    fs = _scan(tmp_path, {"core/rng.py": """
+        import random
+        import numpy as np
+        G = np.random.default_rng(0)
+        R = random.Random(0)
+    """}, rules=["det-global-rng"])
+    assert fs == []
+
+
+_HOT_ENGINE = """
+    import jax
+    import numpy as np
+
+    def helper(x):
+        return np.asarray(x)          # host transfer, jit-reachable
+
+    def cold(x):
+        return np.asarray(x)          # same op, NOT reachable from a jit
+
+    def _step(x):
+        return helper(x)
+
+    class Engine:
+        def __init__(self):
+            self.step = jax.jit(_step, donate_argnums=(0,))
+"""
+
+
+def test_hot_host_sync_flags_only_jit_reachable(tmp_path):
+    fs = _scan(tmp_path, {"core/engine.py": _HOT_ENGINE},
+               rules=["hot-host-sync"])
+    assert len(fs) == 1
+    assert "helper" in fs[0].message and "cold" not in fs[0].message
+
+
+def test_hot_host_sync_cast_filter(tmp_path):
+    fs = _scan(tmp_path, {"core/engine.py": """
+        import jax
+
+        def _step(x):
+            bad = float(x)            # possibly-traced cast: flag
+            ok = float(x.shape[0])    # static shape arithmetic: allow
+            return bad + ok
+
+        j = jax.jit(_step, donate_argnums=(0,))
+    """}, rules=["hot-host-sync"])
+    assert len(fs) == 1 and "`float()`" in fs[0].message
+
+
+def test_jit_donation_flags_undonated_entry(tmp_path):
+    fs = _scan(tmp_path, {"core/engine.py": """
+        import jax
+        def _a(x):
+            return x
+        def _b(x):
+            return x
+        j1 = jax.jit(_a, donate_argnums=(0,))
+        j2 = jax.jit(_b)
+    """}, rules=["jit-donation"])
+    assert len(fs) == 1 and "_b" in fs[0].message
+
+
+def test_tree_order_fires_on_unsorted_dict_reduction(tmp_path):
+    fs = _scan(tmp_path, {
+        "core/baselines.py": "def f(d):\n    return sum(d.values())\n",
+        "utils/tree.py": """
+            def g(d):
+                acc = 0.0
+                for v in d.values():
+                    acc += v
+                return acc
+        """,
+    }, rules=["tree-order"])
+    assert {f.path for f in fs} == {"core/baselines.py", "utils/tree.py"}
+
+
+def test_tree_order_allows_sorted_iteration(tmp_path):
+    fs = _scan(tmp_path, {
+        "core/baselines.py":
+            "def f(d):\n    return sum(sorted(d.values()))\n",
+        "utils/other.py":                 # outside the rule's modules
+            "def g(d):\n    return sum(d.values())\n",
+    }, rules=["tree-order"])
+    assert fs == []
+
+
+def test_trace_schema_flags_unregistered_recorder_name(tmp_path):
+    fs = _scan(tmp_path, {
+        "obs/names.py": _NAMES_PY,
+        "sim/run.py": """
+            def f(obs, n):
+                obs.span("round.total")            # registered
+                obs.inc(f"engine.calls.{n}")       # dynamic prefix, ok
+                obs.span("bogus.name")             # NOT registered
+        """,
+    }, rules=["trace-schema"])
+    assert len(fs) == 1 and "bogus.name" in fs[0].message
+
+
+def test_trace_schema_doc_cross_check(tmp_path):
+    ok_doc = ("`round.total` `compile` `compiles` `run.final_accuracy` "
+              "`ledger.paid` `engine.calls.<entry>`")
+    fs = _scan(tmp_path, {"obs/names.py": _NAMES_PY}, rules=["trace-schema"],
+               trace_doc=ok_doc)
+    assert fs == []
+    # drop one registered name from the doc, add one unknown -> 2 findings
+    bad_doc = ("`round.total` `compile` `compiles` `run.final_accuracy` "
+               "`engine.calls.<entry>` `round.bogus`")
+    fs = _scan(tmp_path, {"obs/names.py": _NAMES_PY}, rules=["trace-schema"],
+               trace_doc=bad_doc)
+    msgs = " | ".join(f.message for f in fs)
+    assert "ledger.paid" in msgs and "round.bogus" in msgs
+
+
+# --------------------------------------------------------------------------- #
+# baseline + report plumbing
+# --------------------------------------------------------------------------- #
+
+def test_baseline_roundtrip_and_stale_detection(tmp_path):
+    f1 = Finding("jit-donation", "core/engine.py", 3, "msg one")
+    f2 = Finding("tree-order", "utils/tree.py", 9, "msg two")
+    write_baseline(str(tmp_path), [f1, f2])
+    entries = load_baseline(str(tmp_path))
+    assert len(entries) == 2
+    fresh, grand, stale = check_baseline([f1], entries)
+    assert fresh == [] and grand == [f1]
+    assert [e["match"] for e in stale] == ["msg two"]
+    f3 = Finding("det-wallclock", "sim/x.py", 1, "new one")
+    fresh, grand, stale = check_baseline([f1, f3], entries)
+    assert fresh == [f3]
+
+
+def test_baseline_rejects_missing_reason(tmp_path):
+    (tmp_path / ".analysis-baseline.json").write_text(json.dumps({
+        "schema": 1,
+        "findings": [{"rule": "r", "path": "p", "match": "m", "reason": ""}],
+    }))
+    with pytest.raises(ValueError, match="reason"):
+        load_baseline(str(tmp_path))
+
+
+def test_report_digest_is_deterministic():
+    fs = [Finding("tree-order", "utils/tree.py", 9, "m")]
+    r1 = build_report(fs, [], [], rules=["tree-order"])
+    r2 = build_report(fs, [], [], rules=["tree-order"])
+    assert r1["report_digest"] == r2["report_digest"]
+    r3 = build_report([], fs, [], rules=["tree-order"])
+    assert r3["report_digest"] != r1["report_digest"]
+
+
+def test_repo_is_green_against_committed_baseline():
+    """The gate CI enforces: the real tree + the committed baseline."""
+    findings = run_source_rules(
+        str(REPO_ROOT / "src" / "repro"), prefix="src/repro/",
+        trace_doc=str(REPO_ROOT / "docs" / "TRACE_SCHEMA.md"))
+    fresh, _, stale = check_baseline(findings,
+                                     load_baseline(str(REPO_ROOT)))
+    assert fresh == [], "\n".join(f.format() for f in fresh)
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+# --------------------------------------------------------------------------- #
+# HLO parsing helpers
+# --------------------------------------------------------------------------- #
+
+def test_donated_params_parses_alias_header():
+    text = ("HloModule jit__step, input_output_alias={ {0}: (0, {}, "
+            "may-alias), {1}: (2, {}, may-alias) }, entry_computation_layout"
+            "={(f32[4]{0})->f32[4]{0}}\n")
+    assert donated_params(text) == {0, 2}
+    assert donated_params("HloModule plain\n") == set()
+
+
+def test_f64_op_count():
+    text = ("  %a = f32[4]{0} add(%x, %y)\n"
+            "  %b = f64[] convert(%a)\n"
+            "  %c = (f32[2]{0}, f64[2]{0}) tuple(%x, %b)\n")
+    assert f64_op_count(text) == 2
+
+
+# --------------------------------------------------------------------------- #
+# Layer 2: the compiled-artifact audit on the REAL engine entries
+# --------------------------------------------------------------------------- #
+
+def test_hlo_audit_mesh1_clean():
+    from repro.analysis.hlo_audit import run_audit
+    findings, info = run_audit(1)
+    assert findings == [], [f.format() for f in findings]
+    assert info["entries"]["sync_step"]["donated_params"] == [0]
+    assert all(v == 1 for v in info["cache_sizes"].values())
+    assert all(e["f64_ops"] == 0 for e in info["entries"].values())
+
+
+@mesh8
+def test_hlo_audit_mesh8_clean():
+    from repro.analysis.hlo_audit import run_audit
+    findings, info = run_audit(8)
+    assert findings == [], [f.format() for f in findings]
+    assert info["entries"]["sync_step"]["donated_params"] == [0]
+    assert info["entries"]["sync_step"]["combine_reductions"] == 0
+    assert info["selftest"]["attributed"] >= 1
+
+
+@mesh8
+def test_partition_unsafe_toy_is_detected():
+    """A cohort-sharded reduction inside the combine scope MUST produce an
+    attributed reduction collective — proves the detector isn't vacuous."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.launch.hlo import collective_lines
+    from repro.launch.mesh import CLIENT_AXIS, make_client_mesh
+
+    mesh = make_client_mesh(8)
+    sharded = NamedSharding(mesh, PartitionSpec(CLIENT_AXIS))
+
+    def unsafe(x):
+        x = jax.lax.with_sharding_constraint(x, sharded)
+        with jax.named_scope("cohort_combine"):
+            return jnp.sum(x, axis=0)
+
+    text = jax.jit(unsafe).lower(
+        jnp.ones((32, 16), jnp.float32)).compile().as_text()
+    hits = [h for h in collective_lines(text)
+            if "cohort_combine" in h[2]
+            and h[1] in ("all-reduce", "reduce-scatter")]
+    assert hits, "combine detector saw no reduction collective"
+
+
+def test_hlo_audit_mesh8_subprocess():
+    """1-device boxes still audit the forced 8-device mesh (the CLI's
+    subprocess dispatch, self-forcing XLA_FLAGS before jax imports)."""
+    if N_DEV >= 8:
+        pytest.skip("in-process mesh8 audit tests cover this")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.hlo_audit",
+         "--shards", "8", "--json", "-"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=900)
+    doc = json.loads(proc.stdout)
+    assert doc["findings"] == [], doc["findings"]
+    assert doc["info"]["selftest"]["attributed"] >= 1
+    assert doc["info"]["entries"]["sync_step"]["combine_reductions"] == 0
+    assert proc.returncode == 0

@@ -3,7 +3,6 @@ including SWA ring buffers past the window, MoE routing, Mamba and RWKV
 states, and whisper cross-attention."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS

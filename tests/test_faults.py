@@ -13,7 +13,6 @@ Contracts under test:
 import json
 from dataclasses import replace
 
-import numpy as np
 import pytest
 
 from repro.api import DataSpec, ExperimentSpec, FaultSpec, TrainSpec, run

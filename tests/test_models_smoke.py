@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS
-from repro.models.lm import lm_loss, make_train_step
+from repro.models.lm import make_train_step
 from repro.models.transformer import forward, init_params
 from repro.optim import sgd
 

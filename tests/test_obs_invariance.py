@@ -16,7 +16,6 @@ import subprocess
 import sys
 
 import jax
-import numpy as np
 import pytest
 
 import repro.api as api

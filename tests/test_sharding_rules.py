@@ -4,7 +4,6 @@ Uses AbstractMesh — no devices needed, so these run on the 1-CPU test
 environment while still exercising the exact production mesh shapes.
 """
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -1,11 +1,10 @@
 """Spectral clustering: planted-partition recovery, validity, determinism."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.pearson import pearson_affinity, pearson_matrix
-from repro.core.spectral import kmeans, spectral_cluster, spectral_embedding
+from repro.core.spectral import kmeans, spectral_cluster
 
 
 def _planted_affinity(sizes, p_in=0.95, p_out=0.05, seed=0):
