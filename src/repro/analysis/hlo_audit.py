@@ -45,10 +45,12 @@ import sys
 from repro.analysis.findings import Finding
 
 ENGINE_PATH = "src/repro/core/engine.py"
+SERVE_ENGINE_PATH = "src/repro/serve/engine.py"
 HLO_RULES = ("hlo-donation", "hlo-combine-collective", "hlo-f64",
              "hlo-cache-stability", "hlo-selftest")
 
 # entries whose jax.jit declares donate_argnums -> the donated param indices
+# (the serve engine's forward states donate_argnums=() — nothing expected)
 DONATING_ENTRIES = {"sync_step": (0,)}
 
 
@@ -104,7 +106,7 @@ def _build_probe(mesh_shards: int, n_clients: int = 32, cohort_k: int = 8):
 
 
 def _audit_entry(name: str, hlo_text: str, mesh_shards: int,
-                 findings: list[Finding]) -> dict:
+                 findings: list[Finding], path: str = ENGINE_PATH) -> dict:
     from repro.launch.hlo import (collective_counts, collective_lines,
                                   donated_params, f64_op_count)
 
@@ -123,14 +125,14 @@ def _audit_entry(name: str, hlo_text: str, mesh_shards: int,
     for idx in DONATING_ENTRIES.get(name, ()):
         if idx not in donated:
             findings.append(Finding(
-                "hlo-donation", ENGINE_PATH, 0,
+                "hlo-donation", path, 0,
                 f"entry `{name}` declares donate_argnums but the compiled "
                 f"module does not alias param {idx} to an output "
                 f"(mesh_shards={mesh_shards})",
                 detail={"entry": name, "mesh_shards": mesh_shards}))
     if combine_hits:
         findings.append(Finding(
-            "hlo-combine-collective", ENGINE_PATH, 0,
+            "hlo-combine-collective", path, 0,
             f"entry `{name}` compiles {len(combine_hits)} reduction "
             f"collective(s) inside the cohort_combine scope at mesh_shards="
             f"{mesh_shards} — the combine must run replicated "
@@ -139,7 +141,7 @@ def _audit_entry(name: str, hlo_text: str, mesh_shards: int,
                     "collectives": [kind for _, kind, _ in combine_hits]}))
     if f64:
         findings.append(Finding(
-            "hlo-f64", ENGINE_PATH, 0,
+            "hlo-f64", path, 0,
             f"entry `{name}` compiles {f64} f64-producing op(s) with jax "
             f"x64 disabled (mesh_shards={mesh_shards})",
             detail={"entry": name, "mesh_shards": mesh_shards}))
@@ -151,6 +153,45 @@ def _audit_entry(name: str, hlo_text: str, mesh_shards: int,
         "f64_ops": f64,
         "collective_counts": collective_counts(hlo_text),
     }
+
+
+def _audit_serve(sim, mesh_shards: int, findings: list[Finding],
+                 cache_check: bool) -> dict:
+    """The same compiled-artifact checks on the serving tier's mixed-batch
+    forward (`repro.serve.engine`), through the REAL provenance gate: the
+    probe snapshot publishes a release block on the probe chain and the
+    engine refuses to build unless verification passes.  No donation is
+    expected (the bank is persistent serving state); f64 leaks and the
+    1-compile-per-batch-shape contract are audited like the round engine."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve import ServingEngine, snapshot
+
+    bank = snapshot(sim)                      # publishes + verifies
+    eng = ServingEngine(bank, sim.trainer.chain)
+    batch = 8
+    x = jnp.linspace(-1.0, 1.0, batch * bank.mcfg.in_dim,
+                     dtype=jnp.float32).reshape(batch, bank.mcfg.in_dim)
+    cids = jnp.arange(batch, dtype=jnp.int32) % bank.n_models
+    text = eng.lower_entry("forward", bank.data, x, cids).compile().as_text()
+    info = {"forward": _audit_entry("serve_forward", text, mesh_shards,
+                                    findings, path=SERVE_ENGINE_PATH)}
+    if cache_check:
+        # same batch shape, different values/routing — must NOT retrace
+        jax.block_until_ready(eng.forward(x, cids))
+        jax.block_until_ready(eng.forward(x + 1.0, cids[::-1]))
+        sizes = eng.cache_sizes()
+        info["cache_sizes"] = sizes
+        for name, size in sizes.items():
+            if size != 1:
+                findings.append(Finding(
+                    "hlo-cache-stability", SERVE_ENGINE_PATH, 0,
+                    f"serve entry `{name}` compiled {size} executables "
+                    f"across same-shape calls (mesh_shards={mesh_shards}) — "
+                    f"the 1-compile-per-batch-shape contract is broken",
+                    detail={"entry": name, "mesh_shards": mesh_shards}))
+    return info
 
 
 def _selftest(mesh_shards: int, findings: list[Finding]) -> dict:
@@ -211,6 +252,10 @@ def run_audit(mesh_shards: int = 1, *, cache_check: bool = True
         text = eng.lower_entry(name, *entry_args[name]).compile().as_text()
         info["entries"][name] = _audit_entry(name, text, mesh_shards,
                                              findings)
+
+    # serve audit first: the engine cache check below EXECUTES sync_step,
+    # whose donation deletes the probe arena the snapshot reads
+    info["serve"] = _audit_serve(sim, mesh_shards, findings, cache_check)
 
     if cache_check:
         # run order matters: sync_step donates the arena, and

@@ -44,8 +44,9 @@ ENGINE_MODULE = "core/engine.py"
 TREE_ORDER_MODULES = ("core/baselines.py", "utils/tree.py")
 NAMES_MODULE = "obs/names.py"
 
-# modules whose execution must be bit-identical under replay
-REPLAY_DIR_PREFIXES = ("sim/", "core/", "blockchain/")
+# modules whose execution must be bit-identical under replay (serve/: the
+# frontend replays request schedules on an injected clock — no wall time)
+REPLAY_DIR_PREFIXES = ("sim/", "core/", "blockchain/", "serve/")
 REPLAY_FILES = ("checkpoint/state.py",)
 REPLAY_EXEMPT_PREFIXES = ("obs/",)
 
@@ -78,7 +79,7 @@ _STATIC_CALLS = frozenset({"len", "prod", "np.prod", "numpy.prod",
 
 _TRACE_DOC_FAMILIES = frozenset({
     "round", "flush", "chain", "ckpt", "run", "fault", "async", "ledger",
-    "engine", "arena", "rounds",
+    "engine", "arena", "rounds", "serve",
 })
 _TRACE_DOC_BARE = frozenset({"compile", "compiles"})
 _RECORDER_RECEIVERS = frozenset({"obs", "rec", "recorder", "_obs", "_rec"})

@@ -41,3 +41,4 @@ from repro.api.spec import (  # noqa: F401
     ObsSpec,
     TrainSpec,
 )
+from repro.serve import serve  # noqa: F401  (run(spec) -> serve(result))

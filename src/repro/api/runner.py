@@ -32,6 +32,11 @@ class ExperimentResult:
     spec: ExperimentSpec
     report: SimReport
     manifest: dict[str, Any] = field(default_factory=dict)
+    # the live simulator behind the run — carries the trained arena, the
+    # chain, and the virtual clock so `repro.serve.snapshot/serve` can turn
+    # a finished run into a serving tier.  Excluded from repr/comparison:
+    # results compare by what they report, not by runtime identity.
+    sim: Any = field(default=None, repr=False, compare=False)
 
     def summary(self) -> str:
         m = self.manifest
@@ -127,7 +132,7 @@ def run(spec: ExperimentSpec, population: ClientPopulation | None = None,
     manifest = build_manifest(spec, sim, report)
     if sim.obs.enabled:
         _emit_trace(spec, sim, manifest)
-    return ExperimentResult(spec, report, manifest)
+    return ExperimentResult(spec, report, manifest, sim=sim)
 
 
 def _emit_trace(spec: ExperimentSpec, sim: SimulatedFederation,

@@ -35,6 +35,14 @@ from functools import cached_property
 AGG_COMMIT_KIND = "agg_commit"      # sender-bound producer record
 MODEL_COMMIT_KIND = "model_hash"    # client-side commitment (Fig. 1 step 2)
 
+# Serving-tier release commitments (repro.serve.snapshot): the "sender" of a
+# release entry is a CLUSTER id, not a client id — the released artifact is
+# the cluster-personalized model, and the same (sender, round, digest) leaf /
+# Merkle-proof machinery gives each served model an O(log K) provenance check
+# against the release block.
+MODEL_RELEASE_KIND = "model_release"      # one per released cluster model
+RELEASE_COMMIT_KIND = "release_commit"    # producer's sender-bound release record
+
 
 def commitment_leaf(sender: int, round_idx: int, digest: str) -> str:
     """SHA-256 leaf binding (sender, round, digest) — the unit the Merkle

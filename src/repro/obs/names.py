@@ -38,6 +38,8 @@ SPAN_NAMES = frozenset({
     "chain.commit", "chain.consensus", "chain.rewards",
     # checkpoint / run lifecycle
     "ckpt.save", "ckpt.restore", "run.final_eval",
+    # serving tier (cat "serve", repro.serve)
+    "serve.snapshot", "serve.verify", "serve.batch", "serve.flush",
 })
 
 # --- events: point-in-time markers (recorder.event) ----------------------- #
@@ -53,18 +55,22 @@ EVENT_NAMES = frozenset({"compile"}) | FAULT_EVENT_NAMES
 COUNTER_NAMES = frozenset({
     "compiles", "rounds.empty", "chain.blocks", "chain.tx",
     "ckpt.saved", "ckpt.restored", "fault.retry", "fault.retry_recovered",
+    "serve.requests", "serve.rejected", "serve.batches", "serve.releases",
+    "serve.verifications",
 }) | (FAULT_EVENT_NAMES - {"fault.commit_delivered_late"})
 
 # --- gauges: last-written values (recorder.set_gauge) --------------------- #
 GAUGE_NAMES = frozenset({
     "arena.bytes", "arena.per_device_bytes", "engine.cohort_bytes",
     "ckpt.bytes", "run.final_accuracy", "run.n_blocks",
+    "serve.bank_bytes", "serve.queue_depth",
 })
 
 # --- series: per-round observations (recorder.observe / recorder.point) --- #
 SERIES_NAMES = frozenset({
     "async.staleness", "async.staleness_weight", "async.staleness_mean",
     "ledger.paid", "ledger.fees", "ledger.burned",
+    "serve.latency", "serve.batch_size",
 })
 
 # Dynamic families: a recorder call may build its name with an f-string as

@@ -1,0 +1,60 @@
+"""`repro.serve` — chain-verified personalized serving tier.
+
+Turns a finished ``repro.api.run(spec)`` into a serving stack for BFLN's
+end product, the K cluster-personalized models:
+
+    result = api.run(spec)
+    frontend = serve(result)               # snapshot -> release -> verify
+    rid = frontend.submit(cluster_id=2, x=features)
+    frontend.drain()
+    [done] = frontend.take_completed()
+
+Pieces (importable individually): :func:`snapshot` extracts the fixed-shape
+model bank from the (possibly sharded) arena, fingerprints it, and mints a
+release block; :class:`ServingEngine` answers mixed-cluster batches in one
+jitted dispatch after :func:`verify_bank`'s refuse-to-serve provenance
+gate; :class:`ServeFrontend` adds deterministic size-bucketed micro-batching
+on an injected clock.  ``serve.*`` spans/counters flow through the flight
+recorder (`docs/TRACE_SCHEMA.md`).
+"""
+from repro.serve.engine import ServingEngine  # noqa: F401
+from repro.serve.frontend import (  # noqa: F401
+    Completion,
+    ServeConfig,
+    ServeFrontend,
+)
+from repro.serve.snapshot import (  # noqa: F401
+    ModelBank,
+    ModelRelease,
+    ProvenanceError,
+    bank_digests,
+    latest_release,
+    load_bank,
+    publish_release,
+    snapshot,
+    tampered,
+    verify_bank,
+)
+
+
+def serve(source, *, config: ServeConfig | None = None, clock=None,
+          obs=None) -> ServeFrontend:
+    """One call from a finished run to a verified serving frontend.
+
+    Snapshot the run's population into a model bank, publish its release
+    block, verify every model's provenance against the chain head, and wire
+    the batched engine behind a frontend driven by the run's own virtual
+    clock (override with ``clock``; pass ``time.perf_counter`` for wall-time
+    serving).
+    """
+    sim = getattr(source, "sim", source)
+    if obs is None:
+        obs = getattr(sim, "obs", None)
+        from repro.obs import NULL_RECORDER
+        if obs is None:
+            obs = NULL_RECORDER
+    bank = snapshot(source, obs=obs)
+    engine = ServingEngine(bank, sim.trainer.chain, obs=obs)
+    return ServeFrontend(engine, config or ServeConfig(),
+                         clock=clock if clock is not None else sim.clock,
+                         obs=obs)

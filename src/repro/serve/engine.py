@@ -1,0 +1,99 @@
+"""Batched multi-model serving engine: one dispatch answers a mixed batch.
+
+The forward extends the ``classifier.apply_stacked`` width-concat idiom
+(the first layer of all K cluster models runs as ONE GEMM) and routes a
+mixed batch — each request bound for a different cluster model — with a
+per-request gather over the ``(K, B, C)`` stacked logits.  Engine
+disciplines mirror ``core/engine.py``:
+
+  * **fixed shape, one compile per batch shape**: the jitted entry is
+    traced once per distinct ``B`` (the frontend's size buckets), audited
+    via :meth:`ServingEngine.cache_sizes` exactly like the round engine;
+  * **donation stated**: ``donate_argnums=()`` on purpose — the bank is the
+    persistent serving state reused by every call (donating it would
+    invalidate the loaded models after one batch), and the per-request
+    buffers are O(B·D) next to the (K, N) bank, with donation a no-op for
+    them on CPU anyway;
+  * **replayable**: no clocks, no RNG, no host round-trips inside the
+    entry; identical requests produce bit-identical logits, and each
+    request's output is independent of how the rest of the batch routes
+    (the gather touches only that request's row);
+  * **provenance-gated**: construction runs :func:`verify_bank` against the
+    chain — a bank that fails the refuse-to-serve gate never serves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import classifier as clf
+from repro.obs import NULL_RECORDER
+from repro.serve.snapshot import ModelBank, ProvenanceError, verify_bank
+
+
+class ServingEngine:
+    """Chain-verified multi-model forward over a :class:`ModelBank`.
+
+    ``chain`` is required unless ``verify=False`` (reserved for analysis
+    probes and oracle paths that state why they skip the gate).
+    """
+
+    def __init__(self, bank: ModelBank, chain=None, *, verify: bool = True,
+                 obs=NULL_RECORDER):
+        if verify:
+            if chain is None:
+                raise ProvenanceError(
+                    "refusing to serve: ServingEngine needs the chain to "
+                    "verify the bank's release (pass verify=False only for "
+                    "non-serving probes)")
+            verify_bank(bank, chain, obs=obs)
+        self.bank = bank
+        self.obs = obs
+        mcfg = bank.mcfg
+        layout = bank.layout
+
+        def _forward(bank_rows, x, cids):
+            # stacked width-concat forward over all K models, then each
+            # request gathers its routed model's row — mixed batch, ONE
+            # dispatch.  donation stated: donate_argnums=() (see module doc).
+            models = layout.unflatten(bank_rows)
+            logits = clf.apply_stacked(mcfg, models, x)      # (K, B, C)
+            return logits[cids, jnp.arange(x.shape[0])]      # (B, C)
+
+        self._entries = {"forward": jax.jit(_forward, donate_argnums=())}
+        obs.set_gauge("serve.bank_bytes", bank.nbytes)
+
+    # ------------------------------------------------------------------ #
+
+    def forward(self, x, cids) -> jax.Array:
+        """Answer a mixed batch: ``x`` (B, in_dim) requests, ``cids`` (B,)
+        cluster routing — returns (B, num_classes) logits."""
+        with self.obs.span("serve.batch", cat="serve") as sp:
+            out = self._entries["forward"](
+                self.bank.data, jnp.asarray(x, jnp.float32),
+                jnp.asarray(cids, jnp.int32))
+            sp.set(batch=int(out.shape[0]))
+        self.obs.inc("serve.batches")
+        self.obs.compile_delta(self.cache_sizes())
+        return out
+
+    def forward_per_request(self, x, cids) -> jax.Array:
+        """Reference path: route every request ALONE through its cluster
+        model (one plain ``classifier.apply`` per request).  The bit-identity
+        oracle for the fused mixed-batch dispatch — test/bench use only."""
+        rows = [clf.apply(self.bank.mcfg, self.bank.model_pytree(int(c)),
+                          jnp.asarray(x[i:i + 1], jnp.float32))[0]
+                for i, c in enumerate(cids)]
+        return jnp.stack(rows)
+
+    def cache_sizes(self) -> dict[str, int]:
+        """Compiles per entry — one per distinct batch shape served."""
+        return {name: fn._cache_size()
+                for name, fn in self._entries.items()}
+
+    def entry_names(self) -> list[str]:
+        return list(self._entries)
+
+    def lower_entry(self, name: str, *args):
+        """Lower an entry for the compiled-HLO audit (`repro.analysis`)."""
+        return self._entries[name].lower(*args)

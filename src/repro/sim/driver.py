@@ -261,6 +261,7 @@ class SimulatedFederation:
                              hidden=tuple(config.hidden),
                              rep_dim=config.rep_dim,
                              num_classes=population.num_classes)
+        self.mcfg = mcfg    # the serving tier rebuilds forwards from this
         self.bundle = ModelBundle(functools.partial(clf.apply, mcfg),
                                   functools.partial(clf.embed, mcfg),
                                   population.num_classes)
